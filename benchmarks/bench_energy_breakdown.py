@@ -1,0 +1,26 @@
+"""Fig. 11 reproduction: per-operator energy shares (MM / SOMA-GRAD / BN /
+RES) within each training stage under the optimal OS_C dataflow."""
+from __future__ import annotations
+
+from repro.core.energy import Dataflow, E2ATSTSimulator, Inner, Outer
+
+
+def run() -> list[str]:
+    sim = E2ATSTSimulator()
+    r = sim.simulate(Dataflow(Inner.OS, Outer.C))
+    lines = ["stage,mm_mj,soma_grad_mj,bn_mj,res_mj,mm_share"]
+    for st in ("FP", "BP", "WG"):
+        b = r.stages[st].energy_by_kind
+        mm = b.get("mm", 0.0)
+        soma = b.get("soma", 0.0)
+        bn = b.get("bn", 0.0)
+        res = b.get("res", 0.0)
+        total = mm + soma + bn + res
+        lines.append(f"{st},{mm * 1e3:.1f},{soma * 1e3:.1f},{bn * 1e3:.1f},"
+                     f"{res * 1e3:.1f},{mm / total:.2f}")
+        assert mm == max(mm, soma, bn, res), "paper: MM dominates every stage"
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,36 @@
+"""Benchmark entry point — one section per paper table/figure.
+
+Prints ``name,value,...`` CSV blocks:
+  table1   - model OPs/energy comparison            (Table I)
+  fig9_10  - nine-dataflow energy+latency sweep     (Fig. 9 / Fig. 10)
+  fig11    - OS_C per-operator energy breakdown     (Fig. 11)
+  table9   - headline metrics vs paper + SOTA       (Table IX)
+  kernels  - Pallas kernel micro-benches            (interpret mode)
+"""
+from __future__ import annotations
+
+import time
+
+
+def main() -> None:
+    from benchmarks import (bench_comparison, bench_dataflows,
+                            bench_energy_breakdown, bench_kernels,
+                            bench_model_table)
+    sections = [
+        ("table1", bench_model_table.run),
+        ("fig9_10", bench_dataflows.run),
+        ("fig11", bench_energy_breakdown.run),
+        ("table9", bench_comparison.run),
+        ("kernels", bench_kernels.run),
+    ]
+    for name, fn in sections:
+        t0 = time.perf_counter()
+        lines = fn()
+        dt = time.perf_counter() - t0
+        print(f"== {name} ({dt:.1f}s) ==")
+        print("\n".join(lines))
+        print()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""End-to-end driver: train a ~1M-param Spikingformer with BPTT on a
+learnable synthetic vision task for a few hundred steps, with AdamW,
+cosine schedule, checkpointing and straggler monitoring.
+
+The task: classify which quadrant of the image carries the brightest
+Gaussian blob (deterministic synthetic data — loss should fall well below
+ln(4) chance level within ~100 steps).
+
+Run:  PYTHONPATH=src python examples/train_spikingformer.py [--steps 200]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.spikingformer import (SpikingFormerConfig, init_spikingformer,
+                                      spikingformer_grad_step)
+from repro.train.checkpoint import save_checkpoint
+from repro.train.optimizer import (OptimizerConfig, adamw_update,
+                                   init_opt_state)
+from repro.train.resilience import StragglerMonitor
+
+
+def make_batch(step: int, batch: int, size: int = 32):
+    rng = np.random.default_rng(step)
+    labels = rng.integers(0, 4, size=batch)
+    imgs = rng.normal(0, 0.1, size=(batch, size, size, 3)).astype(np.float32)
+    half = size // 2
+    for i, lab in enumerate(labels):
+        y0 = (lab // 2) * half
+        x0 = (lab % 2) * half
+        imgs[i, y0:y0 + half, x0:x0 + half] += 1.0
+    return jnp.asarray(imgs), jnp.asarray(labels)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    cfg = SpikingFormerConfig(num_layers=2, d_model=96, n_heads=4, d_ff=384,
+                              time_steps=4, image_size=32, patch_grid=8,
+                              num_classes=4)
+    print(f"spikingformer params: {cfg.param_count():,}")
+    params, state = init_spikingformer(jax.random.PRNGKey(0), cfg)
+    opt_cfg = OptimizerConfig(lr=2e-3, warmup_steps=20,
+                              total_steps=args.steps, weight_decay=0.01)
+    opt_state = init_opt_state(params)
+    monitor = StragglerMonitor()
+
+    for step in range(args.steps):
+        monitor.step_start()
+        imgs, labels = make_batch(step, args.batch)
+        grads, state, metrics = spikingformer_grad_step(params, state, imgs,
+                                                        labels, cfg)
+        params, opt_state, opt_m = adamw_update(params, grads, opt_state,
+                                                opt_cfg)
+        monitor.step_end()
+        if step % 20 == 0 or step == args.steps - 1:
+            print(f"step {step:4d} loss {float(metrics['loss']):.4f} "
+                  f"acc {float(metrics['accuracy']):.2f} "
+                  f"gnorm {float(opt_m['grad_norm']):.2f}", flush=True)
+        if args.ckpt_dir and (step + 1) % 100 == 0:
+            save_checkpoint(args.ckpt_dir, step + 1,
+                            {"params": params, "bn": state}, async_save=True)
+    print(f"median step time {monitor.median * 1e3:.0f} ms "
+          f"(chance loss = {np.log(4):.3f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""E2ATST temporal-spatial energy/latency simulation framework (§IV-V)."""
+from repro.core.energy.constants import (ArrayConfig, MemEnergies, OpEnergies,
+                                         Sparsity, DEFAULT_ARRAY, DEFAULT_MEM,
+                                         DEFAULT_OPS, DEFAULT_SPARSITY)
+from repro.core.energy.dataflow import (ALL_DATAFLOWS, Dataflow, Inner, Outer,
+                                        best_dataflow, compute_cycles,
+                                        mm_latency_cycles, mm_traffic,
+                                        utilization)
+from repro.core.energy.energy_model import OpCost, elem_cost, mm_cost
+from repro.core.energy.simulator import (E2ATSTSimulator, SimResult,
+                                         StageBreakdown, inference_energy_mj)
+from repro.core.energy.workload import (ElemOp, MMOp, SpikingWorkloadConfig,
+                                        generic_mm_workload,
+                                        spikingformer_training_workload)
+
+__all__ = [
+    "ArrayConfig", "MemEnergies", "OpEnergies", "Sparsity", "DEFAULT_ARRAY",
+    "DEFAULT_MEM", "DEFAULT_OPS", "DEFAULT_SPARSITY", "ALL_DATAFLOWS",
+    "Dataflow", "Inner", "Outer", "best_dataflow", "compute_cycles",
+    "mm_latency_cycles", "mm_traffic", "utilization", "OpCost", "elem_cost",
+    "mm_cost", "E2ATSTSimulator", "SimResult", "StageBreakdown",
+    "inference_energy_mj", "ElemOp", "MMOp", "SpikingWorkloadConfig",
+    "generic_mm_workload", "spikingformer_training_workload",
+]

@@ -1,0 +1,139 @@
+"""LIF spiking neuron with surrogate-gradient BPTT (E2ATST eq. 1-3, 11-12).
+
+Forward dynamics (hard reset, as in the paper's eq. 11):
+
+    U_t = alpha * U_{t-1} * (1 - S_{t-1}) + X_t
+    S_t = Heaviside(U_t - th_f)
+
+Backward (eq. 12) falls out of JAX autodiff through ``lax.scan`` once the
+non-differentiable Heaviside is given a rectangular surrogate:
+
+    fire'(U) = 1  if th_lo < U < th_hi   (the paper's spike-gradient mask
+             = 0  otherwise               \nabla\tilde{S}, Table II)
+
+The reset path is kept *attached* (not detached), so the -alpha*U_t term of the
+paper's \nabla S_t recursion is present in the VJP, exactly matching eq. 12.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class LIFConfig:
+    """LIF neuron hyper-parameters (paper defaults)."""
+
+    alpha: float = 0.5          # leakage factor (1 - 1/tau with tau=2)
+    th_fire: float = 1.0        # firing threshold th_f
+    th_lo: float = 0.0          # surrogate window lower bound  (paper: th_f < U < th_r
+    th_hi: float = 2.0          #   one-sided; we centre the window on th_f)
+    grad_scale: float = 1.0     # surrogate magnitude inside the window
+
+
+@jax.custom_vjp
+def fire(u: jax.Array, th_fire: float, th_lo: float, th_hi: float,
+         grad_scale: float) -> jax.Array:
+    """Heaviside spike with rectangular surrogate gradient.
+
+    Returns S = 1[u >= th_fire] in u.dtype; the VJP multiplies the cotangent by
+    the spike-gradient mask  grad_scale * 1[th_lo < u < th_hi].
+    """
+    return (u >= th_fire).astype(u.dtype)
+
+
+def _fire_fwd(u, th_fire, th_lo, th_hi, grad_scale):
+    s = (u >= th_fire).astype(u.dtype)
+    mask = ((u > th_lo) & (u < th_hi)).astype(u.dtype) * grad_scale
+    return s, mask
+
+
+def _fire_bwd(mask, g):
+    return (g * mask, None, None, None, None)
+
+
+fire.defvjp(_fire_fwd, _fire_bwd)
+
+
+def spike_grad_mask(u: jax.Array, cfg: LIFConfig) -> jax.Array:
+    """The paper's \nabla\tilde{S}: 1 inside the surrogate window (stored by
+    the SOMA unit during FP, consumed by GRAD during BP)."""
+    return ((u > cfg.th_lo) & (u < cfg.th_hi)).astype(u.dtype)
+
+
+def lif_step(u_prev: jax.Array, s_prev: jax.Array, x: jax.Array,
+             cfg: LIFConfig) -> tuple[jax.Array, jax.Array]:
+    """One SOMA step (eq. 11): returns (U_t, S_t)."""
+    u = cfg.alpha * u_prev * (1.0 - s_prev) + x
+    s = fire(u, cfg.th_fire, cfg.th_lo, cfg.th_hi, cfg.grad_scale)
+    return u, s
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def lif_scan(x_seq: jax.Array, cfg: LIFConfig) -> jax.Array:
+    """Multi-step LIF over the leading time axis.
+
+    x_seq: (T, ...) membrane input currents (post-BN, per eq. 11).
+    Returns spikes (T, ...) with the same dtype. State starts at rest (0).
+    This is the BPTT-differentiable SOMA module; ``jax.grad`` through it
+    reproduces the GRAD recursion of eq. 12.
+    """
+    u0 = jnp.zeros_like(x_seq[0])
+    s0 = jnp.zeros_like(x_seq[0])
+
+    def step(carry, x):
+        u_prev, s_prev = carry
+        u, s = lif_step(u_prev, s_prev, x, cfg)
+        return (u, s), s
+
+    (_, _), spikes = jax.lax.scan(step, (u0, s0), x_seq)
+    return spikes
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def lif_scan_with_state(x_seq: jax.Array, u0: jax.Array, s0: jax.Array,
+                        cfg: LIFConfig):
+    """Stateful variant for streaming/serving: carries (U, S) across calls."""
+
+    def step(carry, x):
+        u_prev, s_prev = carry
+        u, s = lif_step(u_prev, s_prev, x, cfg)
+        return (u, s), s
+
+    (u, s), spikes = jax.lax.scan(step, (u0, s0), x_seq)
+    return spikes, (u, s)
+
+
+def lif_reference_manual_grad(x_seq: jax.Array, g_seq: jax.Array,
+                              cfg: LIFConfig) -> jax.Array:
+    """Hand-rolled eq. 12 BPTT for testing: given upstream dL/dS_t (g_seq),
+    return dL/dX_t. Mirrors the hardware GRAD unit exactly:
+
+        grad_S_t = g_t - alpha * U_t * grad_U_{t+1}
+        grad_U_t = grad_U_{t+1} * alpha * (1 - S_t) + grad_S_t * fire'(U_t)
+        dL/dX_t  = grad_U_t           (since dU_t/dX_t = 1)
+    """
+    T = x_seq.shape[0]
+    # Forward pass, storing U_t and S_t (what the SOMA unit persists).
+    us, ss = [], []
+    u = jnp.zeros_like(x_seq[0])
+    s = jnp.zeros_like(x_seq[0])
+    for t in range(T):
+        u = cfg.alpha * u * (1.0 - s) + x_seq[t]
+        s = (u >= cfg.th_fire).astype(u.dtype)
+        us.append(u)
+        ss.append(s)
+    # Backward (eq. 12).
+    grads = [None] * T
+    grad_u_next = jnp.zeros_like(x_seq[0])
+    for t in reversed(range(T)):
+        mask = ((us[t] > cfg.th_lo) & (us[t] < cfg.th_hi)).astype(u.dtype)
+        mask = mask * cfg.grad_scale
+        grad_s = g_seq[t] - cfg.alpha * us[t] * grad_u_next
+        grad_u = grad_u_next * cfg.alpha * (1.0 - ss[t]) + grad_s * mask
+        grads[t] = grad_u
+        grad_u_next = grad_u
+    return jnp.stack(grads)

@@ -1,0 +1,212 @@
+"""Spiking Transformer building blocks (Spikingformer [17], E2ATST Fig. 1-2).
+
+Conventions
+-----------
+* Activations carry a leading time axis: ``x: (T, B, N, D)``. Matrix ops fold
+  (T, B, N) into the paper's sequence length S = BS x T x P^2 (Table III).
+* Every layer is a pair of pure functions ``init_*(key, ...) -> params`` and
+  ``*_apply(params, state, x, ...) -> (y, new_state)``; ``state`` holds BN
+  running statistics only.
+* ``Conv1D == MM`` (paper §III-A): the Q/K/V/Z/A/B "Conv1DBN" layers are plain
+  linear transforms followed by BatchNorm.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lif import LIFConfig, lif_scan
+
+Params = dict[str, Any]
+State = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# BatchNorm (paper eq. 13-18 forward; BP handled by autodiff == eq. 19-23)
+# ---------------------------------------------------------------------------
+
+def init_bn(dim: int, dtype=jnp.float32) -> tuple[Params, State]:
+    params = {"gamma": jnp.ones((dim,), dtype), "beta": jnp.zeros((dim,), dtype)}
+    state = {"mean": jnp.zeros((dim,), jnp.float32),
+             "var": jnp.ones((dim,), jnp.float32)}
+    return params, state
+
+
+def bn_apply(params: Params, state: State, x: jax.Array, *, train: bool,
+             momentum: float = 0.9, eps: float = 1e-5):
+    """BatchNorm over all axes but the last (features d), following the
+    paper's E[x^2] - mu^2 formulation (eq. 14-15). Statistics in fp32."""
+    axes = tuple(range(x.ndim - 1))
+    if train:
+        xf = x.astype(jnp.float32)
+        mu = jnp.mean(xf, axis=axes)
+        ex2 = jnp.mean(jnp.square(xf), axis=axes)            # eq. 14
+        var = jnp.maximum(ex2 - jnp.square(mu), 0.0)          # eq. 15
+        new_state = {"mean": momentum * state["mean"] + (1 - momentum) * mu,
+                     "var": momentum * state["var"] + (1 - momentum) * var}
+    else:
+        mu, var = state["mean"], state["var"]
+        new_state = state
+    sqrt_d = jnp.sqrt(var + eps)                               # eq. 16
+    y = (x - mu.astype(x.dtype)) / sqrt_d.astype(x.dtype)      # eq. 17
+    y = params["gamma"] * y + params["beta"]                   # eq. 18
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# Linear (+ BN) layers
+# ---------------------------------------------------------------------------
+
+def init_linear(key, d_in: int, d_out: int, dtype=jnp.float32,
+                scale: float | None = None) -> Params:
+    scale = scale if scale is not None else d_in ** -0.5
+    w = jax.random.normal(key, (d_in, d_out), dtype) * scale
+    return {"w": w}
+
+
+def linear_apply(params: Params, x: jax.Array) -> jax.Array:
+    return x @ params["w"].astype(x.dtype)
+
+
+def init_linear_bn(key, d_in: int, d_out: int, dtype=jnp.float32):
+    params = init_linear(key, d_in, d_out, dtype)
+    bn_p, bn_s = init_bn(d_out, dtype)
+    return {"linear": params, "bn": bn_p}, {"bn": bn_s}
+
+
+def linear_bn_apply(params: Params, state: State, x: jax.Array, *, train: bool):
+    """The paper's Conv1DBN: spike (or real) input -> MM -> BN."""
+    y = linear_apply(params["linear"], x)
+    y, bn_s = bn_apply(params["bn"], state["bn"], y, train=train)
+    return y, {"bn": bn_s}
+
+
+# ---------------------------------------------------------------------------
+# PSSA: Pre-activation Spiking Self-Attention (eq. 8-10)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PSSAConfig:
+    d_model: int
+    n_heads: int
+    lif: LIFConfig = LIFConfig()
+    # QK^T V scaling factor s (Spikformer uses 0.125)
+    scale: float = 0.125
+    # True: (Q K^T) V as in the paper's energy model (2 S^2 d_h term).
+    # False: Q (K^T V) — algebraically identical (no softmax!), O(S d^2);
+    #        this is the beyond-paper TPU optimization (see DESIGN.md §3).
+    qk_first: bool = True
+
+
+def init_pssa(key, cfg: PSSAConfig, dtype=jnp.float32):
+    kq, kk, kv, kz = jax.random.split(key, 4)
+    d = cfg.d_model
+    pq, sq = init_linear_bn(kq, d, d, dtype)
+    pk, sk = init_linear_bn(kk, d, d, dtype)
+    pv, sv = init_linear_bn(kv, d, d, dtype)
+    pz, sz = init_linear_bn(kz, d, d, dtype)
+    return ({"q": pq, "k": pk, "v": pv, "z": pz},
+            {"q": sq, "k": sk, "v": sv, "z": sz})
+
+
+def _split_heads(x: jax.Array, h: int) -> jax.Array:
+    t, b, n, d = x.shape
+    return x.reshape(t, b, n, h, d // h).transpose(0, 1, 3, 2, 4)  # (T,B,h,N,dh)
+
+
+def _merge_heads(x: jax.Array) -> jax.Array:
+    t, b, h, n, dh = x.shape
+    return x.transpose(0, 1, 3, 2, 4).reshape(t, b, n, h * dh)
+
+
+def pssa_apply(params: Params, state: State, x: jax.Array, cfg: PSSAConfig,
+               *, train: bool):
+    """x: (T,B,N,D) real-valued features -> (T,B,N,D); residual added by caller."""
+    xs = lif_scan(x, cfg.lif)                                   # eq. 8  X' = SN(X)
+    q, s_q = linear_bn_apply(params["q"], state["q"], xs, train=train)
+    k, s_k = linear_bn_apply(params["k"], state["k"], xs, train=train)
+    v, s_v = linear_bn_apply(params["v"], state["v"], xs, train=train)
+    qs = lif_scan(q, cfg.lif)                                   # eq. 9 (spike Q/K/V)
+    ks = lif_scan(k, cfg.lif)
+    vs = lif_scan(v, cfg.lif)
+
+    qh, kh, vh = (_split_heads(a, cfg.n_heads) for a in (qs, ks, vs))
+    if cfg.qk_first:
+        attn = jnp.einsum("tbhnd,tbhmd->tbhnm", qh, kh)          # spike counts
+        out = jnp.einsum("tbhnm,tbhmd->tbhnd", attn, vh)
+    else:  # exact reassociation (no softmax): K^T V first
+        kv = jnp.einsum("tbhmd,tbhme->tbhde", kh, vh)
+        out = jnp.einsum("tbhnd,tbhde->tbhne", qh, kv)
+    out = _merge_heads(out) * cfg.scale                          # eq. 10 (* s)
+    out_s = lif_scan(out, cfg.lif)                               # SN(...)
+    z, s_z = linear_bn_apply(params["z"], state["z"], out_s, train=train)
+    return z, {"q": s_q, "k": s_k, "v": s_v, "z": s_z}
+
+
+# ---------------------------------------------------------------------------
+# Spiking MLP (Fig. 2: Linear A -> BN -> SN -> Linear B -> BN)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SMLPConfig:
+    d_model: int
+    d_ff: int
+    lif: LIFConfig = LIFConfig()
+
+
+def init_smlp(key, cfg: SMLPConfig, dtype=jnp.float32):
+    ka, kb = jax.random.split(key)
+    pa, sa = init_linear_bn(ka, cfg.d_model, cfg.d_ff, dtype)
+    pb, sb = init_linear_bn(kb, cfg.d_ff, cfg.d_model, dtype)
+    return {"a": pa, "b": pb}, {"a": sa, "b": sb}
+
+
+def smlp_apply(params: Params, state: State, x: jax.Array, cfg: SMLPConfig,
+               *, train: bool):
+    xs = lif_scan(x, cfg.lif)                 # pre-activation SN
+    h, s_a = linear_bn_apply(params["a"], state["a"], xs, train=train)
+    hs = lif_scan(h, cfg.lif)
+    y, s_b = linear_bn_apply(params["b"], state["b"], hs, train=train)
+    return y, {"a": s_a, "b": s_b}
+
+
+# ---------------------------------------------------------------------------
+# Spiking Transformer block (eq. 5-6, MS residual adds)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BlockConfig:
+    d_model: int
+    n_heads: int
+    d_ff: int
+    lif: LIFConfig = LIFConfig()
+    qk_first: bool = True
+    attn_scale: float = 0.125
+
+    @property
+    def pssa(self) -> PSSAConfig:
+        return PSSAConfig(self.d_model, self.n_heads, self.lif,
+                          self.attn_scale, self.qk_first)
+
+    @property
+    def smlp(self) -> SMLPConfig:
+        return SMLPConfig(self.d_model, self.d_ff, self.lif)
+
+
+def init_block(key, cfg: BlockConfig, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    p_attn, s_attn = init_pssa(k1, cfg.pssa, dtype)
+    p_mlp, s_mlp = init_smlp(k2, cfg.smlp, dtype)
+    return {"pssa": p_attn, "smlp": p_mlp}, {"pssa": s_attn, "smlp": s_mlp}
+
+
+def block_apply(params: Params, state: State, x: jax.Array, cfg: BlockConfig,
+                *, train: bool):
+    a, s_attn = pssa_apply(params["pssa"], state["pssa"], x, cfg.pssa, train=train)
+    x = x + a                                  # eq. 5 (RES, MS Add)
+    m, s_mlp = smlp_apply(params["smlp"], state["smlp"], x, cfg.smlp, train=train)
+    x = x + m                                  # eq. 6 (RES)
+    return x, {"pssa": s_attn, "smlp": s_mlp}

@@ -1,0 +1,91 @@
+"""Fused BatchNorm FP/BP Pallas kernels (E2ATST Fig. 5-6, eq. 13-23).
+
+The ASIC deeply pipelines dedicated BN datapaths (4 adders / 3 muls / 2 divs /
+sqrt per lane). The TPU analog is a single VMEM visit per feature tile that
+computes the statistics with the paper's own E[x^2] - mu^2 formulation and
+normalizes in the same pass — no second HBM trip for the stats.
+
+Layout: x is (M, D); BN is per-feature (last axis). Grid tiles D; every
+program owns the full M rows of its feature block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bn_fwd_kernel(x_ref, gamma_ref, beta_ref, y_ref, mu_ref, sqrt_ref, *,
+                   eps, m_rows):
+    xf = x_ref[...].astype(jnp.float32)
+    mu = jnp.sum(xf, axis=0, keepdims=True) / m_rows              # eq. 13
+    ex2 = jnp.sum(xf * xf, axis=0, keepdims=True) / m_rows        # eq. 14
+    var = jnp.maximum(ex2 - mu * mu, 0.0)                         # eq. 15
+    sqrt_d = jnp.sqrt(var + eps)                                  # eq. 16
+    n = xf - mu                                                   # eq. 17
+    y = gamma_ref[...].astype(jnp.float32) * n / sqrt_d \
+        + beta_ref[...].astype(jnp.float32)                       # eq. 18
+    y_ref[...] = y.astype(y_ref.dtype)
+    mu_ref[...] = mu
+    sqrt_ref[...] = sqrt_d
+
+
+def _bn_bwd_kernel(g_ref, x_ref, gamma_ref, mu_ref, sqrt_ref, dx_ref,
+                   dgamma_ref, dbeta_ref, *, m_rows):
+    g = g_ref[...].astype(jnp.float32)
+    x = x_ref[...].astype(jnp.float32)
+    gamma = gamma_ref[...].astype(jnp.float32)
+    mu, sqrt_d = mu_ref[...], sqrt_ref[...]
+    mi = gamma * g / sqrt_d                                       # eq. 19
+    n = x - mu
+    s_n = jnp.sum(n, axis=0, keepdims=True)                       # eq. 20
+    s_m = jnp.sum(mi, axis=0, keepdims=True)
+    s_mn = jnp.sum(mi * n, axis=0, keepdims=True)
+    dgamma_ref[...] = s_mn / gamma                                # eq. 21
+    dbeta_ref[...] = jnp.sum(g, axis=0, keepdims=True)            # eq. 22
+    sq2 = sqrt_d * sqrt_d
+    dx = (mi - n * s_mn / (m_rows * sq2)
+          + s_n * s_mn / (sq2 * m_rows * m_rows) - s_m / m_rows)  # eq. 23
+    dx_ref[...] = dx.astype(dx_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_d", "interpret"))
+def bn_fwd(x: jax.Array, gamma: jax.Array, beta: jax.Array, *,
+           eps: float = 1e-5, block_d: int = 512, interpret: bool = True):
+    """x: (M, D) -> (y (M, D), mu (1, D), sqrt_d (1, D))."""
+    m, d = x.shape
+    bd = min(block_d, d)
+    grid = (pl.cdiv(d, bd),)
+    col = pl.BlockSpec((m, bd), lambda j: (0, j))
+    vec = pl.BlockSpec((1, bd), lambda j: (0, j))
+    return pl.pallas_call(
+        functools.partial(_bn_fwd_kernel, eps=eps, m_rows=m),
+        grid=grid,
+        in_specs=[col, vec, vec],
+        out_specs=[col, vec, vec],
+        out_shape=[jax.ShapeDtypeStruct((m, d), x.dtype),
+                   jax.ShapeDtypeStruct((1, d), jnp.float32),
+                   jax.ShapeDtypeStruct((1, d), jnp.float32)],
+        interpret=interpret)(x, gamma.reshape(1, d), beta.reshape(1, d))
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def bn_bwd(g: jax.Array, x: jax.Array, gamma: jax.Array, mu: jax.Array,
+           sqrt_d: jax.Array, *, block_d: int = 512, interpret: bool = True):
+    """eq. 19-23: returns (dx (M, D), dgamma (1, D), dbeta (1, D))."""
+    m, d = g.shape
+    bd = min(block_d, d)
+    grid = (pl.cdiv(d, bd),)
+    col = pl.BlockSpec((m, bd), lambda j: (0, j))
+    vec = pl.BlockSpec((1, bd), lambda j: (0, j))
+    return pl.pallas_call(
+        functools.partial(_bn_bwd_kernel, m_rows=m),
+        grid=grid,
+        in_specs=[col, col, vec, vec, vec],
+        out_specs=[col, vec, vec],
+        out_shape=[jax.ShapeDtypeStruct((m, d), g.dtype),
+                   jax.ShapeDtypeStruct((1, d), jnp.float32),
+                   jax.ShapeDtypeStruct((1, d), jnp.float32)],
+        interpret=interpret)(g, x, gamma.reshape(1, d), mu, sqrt_d)

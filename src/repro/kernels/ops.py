@@ -1,0 +1,79 @@
+"""Public jit'd kernel wrappers, differentiable via the paper's GRAD unit.
+
+``lif_soma`` is a custom-VJP op whose forward is the SOMA Pallas kernel and
+whose backward is the GRAD Pallas kernel — the exact FP/BP pairing of the
+E2ATST reuse framework (Fig. 4). ``INTERPRET`` flips every kernel to Pallas
+interpret mode (Python emulation) so the whole stack validates on CPU; on a
+real TPU it is set False and the same code lowers to Mosaic.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import fused_bn, lif_soma, spike_matmul
+
+# CPU container: interpret mode. On TPU set repro.kernels.ops.INTERPRET=False.
+INTERPRET = True
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5))
+def lif_soma_op(x: jax.Array, alpha: float = 0.5, th_fire: float = 1.0,
+                th_lo: float = 0.0, th_hi: float = 2.0,
+                grad_scale: float = 1.0) -> jax.Array:
+    """Differentiable fused LIF over (T, M, D); returns spikes."""
+    s, _, _ = lif_soma.lif_soma_fwd(x, alpha=alpha, th_fire=th_fire,
+                                    th_lo=th_lo, th_hi=th_hi,
+                                    interpret=INTERPRET)
+    return s
+
+
+def _lif_fwd(x, alpha, th_fire, th_lo, th_hi, grad_scale):
+    s, u, mask = lif_soma.lif_soma_fwd(x, alpha=alpha, th_fire=th_fire,
+                                       th_lo=th_lo, th_hi=th_hi,
+                                       interpret=INTERPRET)
+    return s, (u, s, mask)
+
+
+def _lif_bwd(alpha, th_fire, th_lo, th_hi, grad_scale, res, g):
+    u, s, mask = res
+    dx = lif_soma.lif_soma_bwd(g, u, s, mask, alpha=alpha,
+                               grad_scale=grad_scale, interpret=INTERPRET)
+    return (dx,)
+
+
+lif_soma_op.defvjp(_lif_fwd, _lif_bwd)
+
+
+@jax.custom_vjp
+def bn_train_op(x: jax.Array, gamma: jax.Array, beta: jax.Array):
+    """Differentiable fused training BatchNorm over (M, D)."""
+    y, _, _ = fused_bn.bn_fwd(x, gamma, beta, interpret=INTERPRET)
+    return y
+
+
+def _bn_fwd(x, gamma, beta):
+    y, mu, sqrt_d = fused_bn.bn_fwd(x, gamma, beta, interpret=INTERPRET)
+    return y, (x, gamma, mu, sqrt_d)
+
+
+def _bn_bwd(res, g):
+    x, gamma, mu, sqrt_d = res
+    dx, dgamma, dbeta = fused_bn.bn_bwd(g, x, gamma, mu, sqrt_d,
+                                        interpret=INTERPRET)
+    return dx, dgamma.reshape(gamma.shape), dbeta.reshape(gamma.shape)
+
+
+bn_train_op.defvjp(_bn_fwd, _bn_bwd)
+
+
+def spike_matmul_op(spikes: jax.Array, w: jax.Array) -> jax.Array:
+    """Bit-packed spike matmul (forward-only fast path for serving; training
+    uses the dense bf16 path so the WG stage sees the spike values)."""
+    return spike_matmul.spike_matmul(spikes, w, interpret=INTERPRET)
+
+
+def spike_matmul_packed_op(packed: jax.Array, w: jax.Array) -> jax.Array:
+    return spike_matmul.spike_matmul_packed(packed, w, interpret=INTERPRET)

@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lif_soma_fwd_ref(x: jax.Array, *, alpha: float = 0.5,
+                     th_fire: float = 1.0, th_lo: float = 0.0,
+                     th_hi: float = 2.0):
+    """x: (T, M, D) -> (spikes, U_seq, grad_mask), eq. 11."""
+    def step(carry, xt):
+        u_prev, s_prev = carry
+        u = alpha * u_prev * (1.0 - s_prev) + xt
+        s = (u >= th_fire).astype(u.dtype)
+        mask = ((u > th_lo) & (u < th_hi)).astype(u.dtype)
+        return (u, s), (s, u, mask)
+
+    init = (jnp.zeros_like(x[0]), jnp.zeros_like(x[0]))
+    _, (s, u, mask) = jax.lax.scan(step, init, x)
+    return s, u, mask
+
+
+def lif_soma_bwd_ref(g: jax.Array, u_seq: jax.Array, spikes: jax.Array,
+                     mask: jax.Array, *, alpha: float = 0.5,
+                     grad_scale: float = 1.0):
+    """eq. 12 reverse-time recursion -> dL/dX."""
+    def step(grad_u_next, inp):
+        gt, ut, st, mt = inp
+        grad_s = gt - alpha * ut * grad_u_next
+        grad_u = grad_u_next * alpha * (1.0 - st) + grad_s * mt * grad_scale
+        return grad_u, grad_u
+
+    init = jnp.zeros_like(g[0])
+    _, dx = jax.lax.scan(step, init, (g, u_seq, spikes, mask), reverse=True)
+    return dx
+
+
+def spike_matmul_ref(spikes: jax.Array, w: jax.Array) -> jax.Array:
+    """(M, C) {0,1} x (C, K)."""
+    return spikes.astype(w.dtype) @ w
+
+
+def bn_fwd_ref(x: jax.Array, gamma: jax.Array, beta: jax.Array,
+               eps: float = 1e-5):
+    """eq. 13-18 over (M, D); returns (y, mu (1,D), sqrt_d (1,D))."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=0, keepdims=True)
+    var = jnp.maximum(jnp.mean(xf * xf, axis=0, keepdims=True) - mu * mu, 0.0)
+    sqrt_d = jnp.sqrt(var + eps)
+    y = gamma.reshape(1, -1) * (xf - mu) / sqrt_d + beta.reshape(1, -1)
+    return y.astype(x.dtype), mu, sqrt_d
+
+
+def bn_bwd_ref(g: jax.Array, x: jax.Array, gamma: jax.Array, mu: jax.Array,
+               sqrt_d: jax.Array):
+    """eq. 19-23 verbatim."""
+    m = x.shape[0]
+    gf = g.astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    gm = gamma.reshape(1, -1).astype(jnp.float32)
+    mi = gm * gf / sqrt_d
+    n = xf - mu
+    s_n = jnp.sum(n, axis=0, keepdims=True)
+    s_m = jnp.sum(mi, axis=0, keepdims=True)
+    s_mn = jnp.sum(mi * n, axis=0, keepdims=True)
+    dgamma = s_mn / gm
+    dbeta = jnp.sum(gf, axis=0, keepdims=True)
+    sq2 = sqrt_d * sqrt_d
+    dx = mi - n * s_mn / (m * sq2) + s_n * s_mn / (sq2 * m * m) - s_m / m
+    return dx.astype(g.dtype), dgamma, dbeta

@@ -1,0 +1,84 @@
+"""Bit-packed spike x FP16/bf16 matmul Pallas kernel (E2ATST spike-MM unit).
+
+The ASIC simplifies spike-operand MACs to additions; the TPU MXU cannot gate
+multiplies per lane, so the paper's insight is realized on the *memory* side:
+spikes travel HBM -> VMEM packed at 1 bit/element (16x less traffic than
+bf16) and are unpacked to bf16 inside VMEM immediately before the MXU dot.
+
+Packing is along the contraction dim C (LSB-first within each byte):
+    packed[m, c8] = sum_{b=0..7} spikes[m, 8*c8 + b] << b
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def spike_pack(spikes: jax.Array) -> jax.Array:
+    """(..., C) {0,1} -> (..., C//8) uint8, LSB-first along C."""
+    *lead, c = spikes.shape
+    assert c % 8 == 0, f"contraction dim {c} must be a multiple of 8"
+    bits = spikes.reshape(*lead, c // 8, 8).astype(jnp.uint8)
+    weights = (1 << jnp.arange(8, dtype=jnp.uint8))
+    return jnp.sum(bits * weights, axis=-1, dtype=jnp.uint8)
+
+
+def spike_unpack(packed: jax.Array, dtype=jnp.float32) -> jax.Array:
+    """(..., C//8) uint8 -> (..., C) in ``dtype``."""
+    shifts = jnp.arange(8, dtype=jnp.uint8)
+    bits = (packed[..., None] >> shifts) & jnp.uint8(1)
+    return bits.reshape(*packed.shape[:-1], packed.shape[-1] * 8).astype(dtype)
+
+
+def _spike_mm_kernel(sp_ref, w_ref, o_ref, acc_ref, *, n_cb):
+    """Grid (M/bm, K/bk, C/bc); accumulate over the C axis in fp32 VMEM."""
+    cb = pl.program_id(2)
+
+    @pl.when(cb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = spike_unpack(sp_ref[...], dtype=w_ref.dtype)       # (bm, bc) in VMEM
+    acc_ref[...] += jnp.dot(x, w_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(cb == n_cb - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block_m", "block_k", "block_c", "out_dtype", "interpret"))
+def spike_matmul_packed(packed: jax.Array, w: jax.Array, *, block_m: int = 256,
+                        block_k: int = 256, block_c: int = 512,
+                        out_dtype=None, interpret: bool = True) -> jax.Array:
+    """packed: (M, C//8) uint8; w: (C, K) -> (M, K).
+
+    MXU-aligned blocks (multiples of 128); the fp32 accumulator tile lives in
+    a VMEM scratch buffer revisited across the C grid axis.
+    """
+    m, c8 = packed.shape
+    c, k = w.shape
+    assert c == c8 * 8, f"packed C {c8 * 8} != weight C {c}"
+    out_dtype = out_dtype or w.dtype
+    bm, bk, bc = min(block_m, m), min(block_k, k), min(block_c, c)
+    assert bc % 8 == 0
+    grid = (pl.cdiv(m, bm), pl.cdiv(k, bk), pl.cdiv(c, bc))
+    return pl.pallas_call(
+        functools.partial(_spike_mm_kernel, n_cb=grid[2]),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, bc // 8), lambda i, j, cb: (i, cb)),
+                  pl.BlockSpec((bc, bk), lambda i, j, cb: (cb, j))],
+        out_specs=pl.BlockSpec((bm, bk), lambda i, j, cb: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, k), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bk), jnp.float32)],
+        interpret=interpret)(packed, w)
+
+
+def spike_matmul(spikes: jax.Array, w: jax.Array, **kw) -> jax.Array:
+    """Convenience: unpacked {0,1} spikes (M, C) x (C, K)."""
+    return spike_matmul_packed(spike_pack(spikes), w, **kw)

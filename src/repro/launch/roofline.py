@@ -1,0 +1,69 @@
+"""Roofline aggregation: read the dry-run JSON cells and emit the
+EXPERIMENTS.md §Roofline table (three terms per cell, dominant bound,
+useful-flops ratio, one-line lever note).
+
+  PYTHONPATH=src python -m repro.launch.roofline [--mesh pod16x16] [--md]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+LEVERS = {
+    ("compute",): "raise MXU occupancy: larger microbatch per device / "
+                  "fuse small einsums",
+    ("memory",): "cut HBM traffic: fused/flash attention, bf16 params, "
+                 "donated buffers, wider fusion",
+    ("collective",): "reshard: overlap all-reduce with compute, move "
+                     "collectives off the critical path, compress grads",
+}
+
+
+def load_cells(mesh_name: str) -> list[dict]:
+    base = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                        "..", "..", "experiments", "dryrun",
+                                        mesh_name))
+    return [json.load(open(f))
+            for f in sorted(glob.glob(os.path.join(base, "*.json")))]
+
+
+def fmt_row(r: dict, md: bool) -> str:
+    rl = r["roofline"]
+    peak = (r["bytes_per_device"]["peak"] or 0) / 1e9
+    ratio = r["useful_flops_ratio"]
+    cells = [r["arch"], r["shape"],
+             f"{rl['compute_s']:.3e}", f"{rl['memory_s']:.3e}",
+             f"{rl['collective_s']:.3e}", rl["bound"],
+             f"{peak:.2f}", f"{ratio:.2f}" if ratio else "-"]
+    sep = " | " if md else ","
+    return ("| " if md else "") + sep.join(cells) + (" |" if md else "")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod16x16")
+    ap.add_argument("--md", action="store_true")
+    args = ap.parse_args()
+    cells = load_cells(args.mesh)
+    header = ["arch", "shape", "compute_s", "memory_s", "collective_s",
+              "bound", "peak_GB", "useful_ratio"]
+    if args.md:
+        print("| " + " | ".join(header) + " |")
+        print("|" + "---|" * len(header))
+    else:
+        print(",".join(header))
+    for r in cells:
+        print(fmt_row(r, args.md))
+    bounds = {}
+    for r in cells:
+        bounds[r["roofline"]["bound"]] = bounds.get(
+            r["roofline"]["bound"], 0) + 1
+    print(f"\n# {len(cells)} cells on {args.mesh}; dominant bounds: {bounds}")
+    for k, v in LEVERS.items():
+        print(f"# lever[{k[0]}]: {v}")
+
+
+if __name__ == "__main__":
+    main()

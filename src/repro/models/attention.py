@@ -1,0 +1,304 @@
+"""Attention layers: GQA with RoPE / QKV-bias / qk-norm / sliding window,
+plus a chunked (flash-style, online-softmax) path for long prefill and the
+single-token decode path against a dense or ring-buffer KV cache.
+
+Sharding: head dim of Q/K/V projections is tensor-parallel over "model";
+activations stay batch-sharded. KV caches shard (batch, heads).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (BATCH, MODEL, Leaf, apply_rope, init_rmsnorm,
+                                 normal_leaf, rmsnorm, shard, zeros_leaf)
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    sliding_window: int | None = None
+    rope_theta: float = 1_000_000.0
+    use_rope: bool = True
+    causal: bool = True
+    norm_eps: float = 1e-6
+    # one-hot multiply rewrites the whole cache per step (O(S) HBM traffic);
+    # scatter writes only the touched row (O(1)) — §Perf lever.
+    scatter_cache: bool = False
+
+
+def init_attention(key, cfg: AttnConfig, dtype=jnp.float32):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    d, h, hk, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    p = {
+        "wq": normal_leaf(kq, (d, h, dh), (None, MODEL, None), dtype=dtype),
+        "wk": normal_leaf(kk, (d, hk, dh), (None, MODEL, None), dtype=dtype),
+        "wv": normal_leaf(kv, (d, hk, dh), (None, MODEL, None), dtype=dtype),
+        "wo": normal_leaf(ko, (h, dh, d), (MODEL, None, None),
+                          scale=(h * dh) ** -0.5, dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = zeros_leaf((h, dh), (MODEL, None), dtype)
+        p["bk"] = zeros_leaf((hk, dh), (MODEL, None), dtype)
+        p["bv"] = zeros_leaf((hk, dh), (MODEL, None), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(dh, dtype)
+        p["k_norm"] = init_rmsnorm(dh, dtype)
+    return p
+
+
+def _attn_scheme(cfg: AttnConfig, seq: int) -> str:
+    """Training-path parallelism for attention, by divisibility:
+    'heads'  - Megatron TP over (repeated) query heads
+    'seq'    - sequence/context parallelism: q S-sharded, k/v gathered
+               (for head counts that don't divide the mesh, e.g. 20 on 16 —
+               dh-sharding would force an all-reduce of the (S,S) scores,
+               ~64 GB/layer at 4k; seq-parallel gathers ~0.3 GB/layer)
+    'none'   - replicated (last resort)"""
+    from repro.models.common import mesh_axis_size
+    m = mesh_axis_size(MODEL) or 1
+    if cfg.n_heads % m == 0:
+        return "heads"
+    if seq % m == 0:
+        return "seq"
+    return "none"
+
+
+def _project_qkv(params, x, cfg: AttnConfig, positions,
+                 scheme: str = "heads"):
+    """x: (B, S, D) -> q (B,S,H,dh), k/v (B,S,HK,dh), RoPE'd + normed."""
+    q = jnp.einsum("bsd,dhe->bshe", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhe->bshe", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhe->bshe", x, params["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    if cfg.use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    if scheme == "seq":
+        q = shard(q, BATCH, MODEL, None, None)
+        k = shard(k, BATCH, None, None, None)
+        v = shard(v, BATCH, None, None, None)
+    else:
+        q = shard(q, BATCH, None, MODEL, None)
+        k = shard(k, BATCH, None, MODEL, None)
+        v = shard(v, BATCH, None, MODEL, None)
+    return q, k, v
+
+
+def _repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
+    if n_rep == 1:
+        return k
+    b, s, hk, dh = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, hk, n_rep, dh)
+                            ).reshape(b, s, hk * n_rep, dh)
+
+
+def _mask_bias(sq: int, sk: int, cfg: AttnConfig, q_offset: int = 0):
+    """(sq, sk) additive mask: causal + optional sliding window."""
+    qi = jnp.arange(sq)[:, None] + q_offset
+    ki = jnp.arange(sk)[None, :]
+    ok = jnp.ones((sq, sk), bool)
+    if cfg.causal:
+        ok &= ki <= qi
+    if cfg.sliding_window is not None:
+        ok &= ki > qi - cfg.sliding_window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def attention(params, x: jax.Array, cfg: AttnConfig,
+              positions: jax.Array | None = None) -> jax.Array:
+    """Full (training / short-prefill) attention. x: (B, S, D)."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    scheme = _attn_scheme(cfg, s)
+    q, k, v = _project_qkv(params, x, cfg, positions, scheme)
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    k, v = _repeat_kv(k, n_rep), _repeat_kv(v, n_rep)
+    scale = cfg.d_head ** -0.5
+    logits = jnp.einsum("bshe,bthe->bhst", q, k).astype(jnp.float32) * scale
+    if scheme == "seq":
+        logits = shard(logits, BATCH, None, MODEL, None)
+    logits = logits + _mask_bias(s, s, cfg)[None, None]
+    probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhst,bthe->bshe", probs, v)
+    out = shard(out, BATCH, MODEL, None, None) if scheme == "seq" else \
+        shard(out, BATCH, None, MODEL, None)
+    return jnp.einsum("bshe,hed->bsd", out, params["wo"].astype(x.dtype))
+
+
+def flash_core(q: jax.Array, k: jax.Array, v: jax.Array, *, scale: float,
+               causal: bool = True, sliding_window: int | None = None,
+               kv_chunk: int = 1024) -> jax.Array:
+    """Chunked online-softmax attention core: q/k (B,S,H,dk), v (B,S,H,dv)
+    -> (B,S,H,dv). Never materializes the (S,S) score matrix; scans KV in
+    ``kv_chunk`` blocks carrying running (max, sum, acc) statistics.
+    Shared by GQA, MLA and the whisper decoder for long prefill."""
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    n_chunks = max(1, s // kv_chunk)
+    ck = s // n_chunks
+    kc = k.reshape(b, n_chunks, ck, h, dk)
+    vc = v.reshape(b, n_chunks, ck, h, dv)
+    qi = jnp.arange(s)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kj, vj, j = inp
+        kpos = j * ck + jnp.arange(ck)
+        logit = jnp.einsum("bshe,bthe->bhst", q, kj).astype(jnp.float32) \
+            * scale
+        ok = jnp.ones((s, ck), bool)
+        if causal:
+            ok &= kpos[None, :] <= qi[:, None]
+        if sliding_window is not None:
+            ok &= kpos[None, :] > qi[:, None] - sliding_window
+        logit = logit + jnp.where(ok, 0.0, NEG_INF)[None, None]
+        m_new = jnp.maximum(m, logit.max(-1))
+        p = jnp.exp(logit - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhst,bthe->bhse", p, vj.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, s), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, s), jnp.float32)
+    acc0 = jnp.zeros((b, h, s, dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, acc0),
+        (kc.transpose(1, 0, 2, 3, 4), vc.transpose(1, 0, 2, 3, 4),
+         jnp.arange(n_chunks)))
+    out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+    return out.transpose(0, 2, 1, 3)                     # (B, S, H, dv)
+
+
+def flash_attention(params, x: jax.Array, cfg: AttnConfig,
+                    kv_chunk: int = 1024) -> jax.Array:
+    """Long-prefill GQA attention built on ``flash_core``."""
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    scheme = _attn_scheme(cfg, s)
+    q, k, v = _project_qkv(params, x, cfg, positions, scheme)
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    k, v = _repeat_kv(k, n_rep), _repeat_kv(v, n_rep)
+    out = flash_core(q, k, v, scale=cfg.d_head ** -0.5, causal=cfg.causal,
+                     sliding_window=cfg.sliding_window, kv_chunk=kv_chunk)
+    out = shard(out, BATCH, MODEL, None, None) if scheme == "seq" else \
+        shard(out, BATCH, None, MODEL, None)
+    return jnp.einsum("bshe,hed->bsd", out, params["wo"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Decode with KV cache
+# ---------------------------------------------------------------------------
+
+def attention_decode(params, x: jax.Array, cache: dict[str, jax.Array],
+                     pos: jax.Array, cfg: AttnConfig
+                     ) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """One-token decode. x: (B, 1, D); cache: {"k","v"} (B, S_cache, HK, dh);
+    pos: (B,) current position (number of tokens already in cache).
+
+    Sliding-window caches are ring buffers of size ``cfg.sliding_window``;
+    dense caches are written at ``pos`` directly.
+    """
+    b = x.shape[0]
+    q = jnp.einsum("bsd,dhe->bshe", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhe->bshe", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhe->bshe", x, params["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    if cfg.use_rope:
+        q = apply_rope(q, pos[:, None], cfg.rope_theta)
+        k = apply_rope(k, pos[:, None], cfg.rope_theta)
+
+    s_cache = cache["k"].shape[1]
+    slot = pos % s_cache if cfg.sliding_window is not None else pos
+    if cfg.scatter_cache:
+        bi = jnp.arange(b)
+        new_k = cache["k"].at[bi, slot].set(k[:, 0].astype(cache["k"].dtype))
+        new_v = cache["v"].at[bi, slot].set(v[:, 0].astype(cache["v"].dtype))
+    else:
+        onehot = jax.nn.one_hot(slot, s_cache, dtype=k.dtype)   # (B, S)
+        new_k = cache["k"] * (1 - onehot)[..., None, None] + \
+            onehot[..., None, None] * k.astype(cache["k"].dtype)
+        new_v = cache["v"] * (1 - onehot)[..., None, None] + \
+            onehot[..., None, None] * v.astype(cache["v"].dtype)
+
+    # Keep every attention operand on ONE consistent scheme, keyed off the
+    # KV-head divisibility (the cache is the big tensor; a scheme mismatch
+    # makes XLA all-gather the whole cache every step — observed 107 GB/step
+    # for kv=8 < 16 shards before this alignment):
+    #   kv-heads divide  -> head parallelism end to end
+    #   else seq divides -> flash-decode style: cache seq-sharded, q
+    #                       replicated, contraction psums a tiny output
+    #   else             -> head_dim parallelism
+    from repro.models.common import mesh_axis_size
+    m = mesh_axis_size(MODEL) or 1
+    seq_mode = cfg.n_kv_heads % m != 0 and s_cache % m == 0
+    if not seq_mode and cfg.n_kv_heads % m == 0:
+        kv_spec = (BATCH, None, MODEL, None)
+        q_spec = (BATCH, None, MODEL, None)
+    elif seq_mode:
+        kv_spec = (BATCH, MODEL, None, None)
+        q_spec = (BATCH, None, None, None)
+    else:
+        kv_spec = (BATCH, None, None, MODEL)
+        q_spec = (BATCH, None, None, MODEL)
+    new_k = shard(new_k, *kv_spec)
+    new_v = shard(new_v, *kv_spec)
+    q = shard(q, *q_spec)
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    kk = _repeat_kv(new_k.astype(x.dtype), n_rep)
+    vv = _repeat_kv(new_v.astype(x.dtype), n_rep)
+    if seq_mode:
+        # the heads-sharded wo param would otherwise pull the whole chain
+        # (probs -> logits -> kk) to heads sharding, forcing a full-cache
+        # all-gather each step; pin the repeated K/V to the cache's seq
+        # sharding so attention contracts locally and psums a tiny output.
+        kk = shard(kk, BATCH, MODEL, None, None)
+        vv = shard(vv, BATCH, MODEL, None, None)
+    scale = cfg.d_head ** -0.5
+    logits = jnp.einsum("bshe,bthe->bhst", q, kk).astype(jnp.float32) * scale
+    if seq_mode:
+        logits = shard(logits, BATCH, None, None, MODEL)
+    idx = jnp.arange(s_cache)[None]                              # (1, S)
+    valid = idx <= slot[:, None] if cfg.sliding_window is None else \
+        (idx <= slot[:, None]) | (pos[:, None] >= s_cache)
+    logits = logits + jnp.where(valid, 0.0, NEG_INF)[:, None, None, :]
+    probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    if seq_mode:
+        probs = shard(probs, BATCH, None, None, MODEL)
+    out = jnp.einsum("bhst,bthe->bshe", probs, vv)
+    if seq_mode:
+        out = shard(out, BATCH, None, None, None)   # psum'd, tiny: replicate
+    out = jnp.einsum("bshe,hed->bsd", out, params["wo"].astype(x.dtype))
+    return out, {"k": new_k, "v": new_v}
+
+
+def init_kv_cache(batch: int, cfg: AttnConfig, max_seq: int,
+                  dtype=jnp.bfloat16) -> dict[str, jax.Array]:
+    size = min(max_seq, cfg.sliding_window) if cfg.sliding_window else max_seq
+    shape = (batch, size, cfg.n_kv_heads, cfg.d_head)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}

@@ -1,0 +1,321 @@
+"""Unified decoder LM assembled from an ArchConfig.
+
+Families:
+  dense / moe / vlm : pre-norm (GQA | MLA) + pre-norm (SwiGLU | MoE) blocks
+  rwkv              : ln + time-mix, ln + channel-mix blocks
+  hybrid (zamba2)   : groups of Mamba2 blocks + ONE weight-shared attention
+                      block applied between groups
+
+Blocks are homogeneous per stack and scanned over depth (HLO size O(1) in
+num_layers); hybrid scans over groups with the shared block's params closed
+over as constants. ``jax.checkpoint`` wraps scanned bodies when cfg.remat.
+
+Entry points:
+  init_lm(key, cfg)                    -> augmented param tree (Leaf leaves)
+  lm_loss(params, batch, cfg)          -> (loss, metrics)    [training]
+  lm_prefill(params, batch, cfg)       -> (logits, cache)    [serving]
+  lm_decode_step(params, cache, tokens, pos, cfg) -> (logits, cache)
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn_mod
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models import rwkv as rwkv_mod
+from repro.models import ssm as ssm_mod
+from repro.models.common import (BATCH, cross_entropy_loss, embed, lscan,
+                                 init_embedding, init_rmsnorm, rmsnorm,
+                                 shard_batch, stack_layer_trees, unembed)
+from repro.models.mlp import init_swiglu, swiglu
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Block init/apply per family
+# ---------------------------------------------------------------------------
+
+def _init_dense_block(key, cfg: ArchConfig):
+    k_attn, k_ffn = jax.random.split(key)
+    p = {"ln1": init_rmsnorm(cfg.d_model, cfg.dtype),
+         "ln2": init_rmsnorm(cfg.d_model, cfg.dtype)}
+    if cfg.mla is not None:
+        p["attn"] = mla_mod.init_mla(k_attn, cfg.mla, cfg.dtype)
+    else:
+        p["attn"] = attn_mod.init_attention(k_attn, cfg.attn, cfg.dtype)
+    if cfg.moe is not None:
+        p["ffn"] = moe_mod.init_moe(k_ffn, cfg.moe, cfg.dtype)
+    else:
+        p["ffn"] = init_swiglu(k_ffn, cfg.d_model, cfg.d_ff, cfg.dtype)
+    return p
+
+
+def _dense_block(p, x, cfg: ArchConfig, *, use_flash: bool):
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if cfg.mla is not None:
+        a = mla_mod.mla_flash_attention(p["attn"], h, cfg.mla) if use_flash \
+            else mla_mod.mla_attention(p["attn"], h, cfg.mla)
+    elif use_flash:
+        a = attn_mod.flash_attention(p["attn"], h, cfg.attn)
+    else:
+        a = attn_mod.attention(p["attn"], h, cfg.attn)
+    x = x + a
+    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.moe is not None:
+        f, aux = moe_mod.moe_apply(p["ffn"], h, cfg.moe)
+    else:
+        f = swiglu(p["ffn"], h)
+    return x + f, aux
+
+
+def _dense_block_decode(p, x, cache, pos, cfg: ArchConfig):
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if cfg.mla is not None:
+        a, cache = mla_mod.mla_decode(p["attn"], h, cache, pos, cfg.mla)
+    else:
+        a, cache = attn_mod.attention_decode(p["attn"], h, cache, pos,
+                                             cfg.attn)
+    x = x + a
+    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if cfg.moe is not None:
+        f, _ = moe_mod.moe_apply(p["ffn"], h, cfg.moe)
+    else:
+        f = swiglu(p["ffn"], h)
+    return x + f, cache
+
+
+def _init_rwkv_block(key, cfg: ArchConfig):
+    k_t, k_c = jax.random.split(key)
+    return {"ln1": init_rmsnorm(cfg.d_model, cfg.dtype),
+            "ln2": init_rmsnorm(cfg.d_model, cfg.dtype),
+            "time": rwkv_mod.init_rwkv_time_mix(k_t, cfg.rwkv, cfg.dtype),
+            "chan": rwkv_mod.init_rwkv_channel_mix(k_c, cfg.rwkv, cfg.dtype)}
+
+
+def _rwkv_block(p, x, cfg: ArchConfig):
+    x = x + rwkv_mod.rwkv_time_mix(p["time"],
+                                   rmsnorm(p["ln1"], x, cfg.norm_eps),
+                                   cfg.rwkv)
+    x = x + rwkv_mod.rwkv_channel_mix(p["chan"],
+                                      rmsnorm(p["ln2"], x, cfg.norm_eps),
+                                      cfg.rwkv)
+    return x
+
+
+def _rwkv_block_decode(p, x, state, cfg: ArchConfig):
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    t_out, t_state = rwkv_mod.rwkv_time_mix_decode(p["time"], h,
+                                                   state["time"], cfg.rwkv)
+    x = x + t_out
+    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    c_out = rwkv_mod.rwkv_channel_mix(p["chan"], h, cfg.rwkv,
+                                      x_prev=state["chan"])
+    x = x + c_out
+    return x, {"time": t_state, "chan": h}
+
+
+def _init_mamba_block(key, cfg: ArchConfig):
+    return {"ln": init_rmsnorm(cfg.d_model, cfg.dtype),
+            "ssm": ssm_mod.init_ssm(key, cfg.ssm, cfg.dtype)}
+
+
+def _mamba_block(p, x, cfg: ArchConfig):
+    return x + ssm_mod.ssm_mixer(p["ssm"], rmsnorm(p["ln"], x, cfg.norm_eps),
+                                 cfg.ssm)
+
+
+def _mamba_block_decode(p, x, state, cfg: ArchConfig):
+    out, state = ssm_mod.ssm_decode(p["ssm"],
+                                    rmsnorm(p["ln"], x, cfg.norm_eps),
+                                    state, cfg.ssm)
+    return x + out, state
+
+
+# ---------------------------------------------------------------------------
+# Model init
+# ---------------------------------------------------------------------------
+
+def init_lm(key, cfg: ArchConfig):
+    k_emb, k_blocks, k_shared, k_head = jax.random.split(key, 4)
+    p: Params = {"embed": init_embedding(k_emb, cfg.vocab_size, cfg.d_model,
+                                         cfg.dtype),
+                 "ln_f": init_rmsnorm(cfg.d_model, cfg.dtype)}
+    if cfg.family == "rwkv":
+        block_init = _init_rwkv_block
+    elif cfg.family == "hybrid":
+        block_init = _init_mamba_block
+    else:
+        block_init = _init_dense_block
+    keys = jax.random.split(k_blocks, cfg.num_layers)
+    p["blocks"] = stack_layer_trees(
+        [block_init(keys[i], cfg) for i in range(cfg.num_layers)])
+    if cfg.family == "hybrid":
+        # the single weight-shared attention block (zamba2)
+        p["shared"] = _init_dense_block(
+            k_shared, cfg.replace(moe=None, mla=None, family="dense"))
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+def _hybrid_group_shape(cfg: ArchConfig) -> tuple[int, int]:
+    k = cfg.hybrid_attn_every or cfg.num_layers
+    assert cfg.num_layers % k == 0
+    return cfg.num_layers // k, k          # (groups, layers per group)
+
+
+def _regroup(tree, groups: int, per: int):
+    return jax.tree.map(
+        lambda a: a.reshape(groups, per, *a.shape[1:]), tree)
+
+
+def lm_forward(params: Params, batch: dict[str, jax.Array], cfg: ArchConfig,
+               *, use_flash: bool = False):
+    """batch: tokens (B, S) [+ patch_embeds/patch_mask for vlm].
+    Returns (hidden (B, S, D), aux_loss)."""
+    tokens = batch["tokens"]
+    x = embed(params["embed"], tokens, cfg.dtype)
+    if cfg.vlm_stub and "patch_embeds" in batch:
+        # pixtral: image patches arrive pre-embedded (frontend stub); merge.
+        pe = batch["patch_embeds"].astype(cfg.dtype)
+        x = jnp.where(batch["patch_mask"][..., None], pe, x)
+    x = shard_batch(x, None, None)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if cfg.family == "rwkv":
+        def body(x, p):
+            return _rwkv_block(p, x, cfg), None
+        body = jax.checkpoint(body) if cfg.remat else body
+        x, _ = lscan(cfg, body, x, params["blocks"])
+    elif cfg.family == "hybrid":
+        groups, per = _hybrid_group_shape(cfg)
+        blocks = _regroup(params["blocks"], groups, per)
+        shared = params["shared"]
+        s_cfg = cfg.replace(moe=None, mla=None, family="dense")
+
+        def group(x, gp):
+            def inner(x, p):
+                return _mamba_block(p, x, cfg), None
+            x, _ = lscan(cfg, inner, x, gp)
+            x, _ = _dense_block(shared, x, s_cfg, use_flash=use_flash)
+            return x, None
+        group = jax.checkpoint(group) if cfg.remat else group
+        x, _ = lscan(cfg, group, x, blocks)
+    else:
+        def body(x, p):
+            y, aux = _dense_block(p, x, cfg, use_flash=use_flash)
+            return y, aux
+        body = jax.checkpoint(body) if cfg.remat else body
+        x, auxs = lscan(cfg, body, x, params["blocks"])
+        aux_total = jnp.sum(auxs)
+
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    return x, aux_total
+
+
+def lm_loss(params: Params, batch: dict[str, jax.Array], cfg: ArchConfig,
+            aux_weight: float = 0.01):
+    """Next-token cross entropy (+ MoE balance aux)."""
+    x, aux = lm_forward(params, batch, cfg, use_flash=cfg.flash_train)
+    logits = unembed(params["embed"], x)
+    labels = batch["labels"]
+    mask = batch.get("loss_mask")
+    loss = cross_entropy_loss(logits, labels, mask)
+    total = loss + aux_weight * aux
+    return total, {"loss": loss, "aux_loss": aux,
+                   "logits_mean_abs": jnp.mean(jnp.abs(logits))}
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + single-token decode against a stacked per-layer cache
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16):
+    """Stacked (L, ...) decode state matching the family."""
+    def stack(make, n):
+        one = make()
+        return jax.tree.map(lambda a: jnp.broadcast_to(a[None],
+                                                       (n, *a.shape)), one)
+
+    if cfg.family == "rwkv":
+        return stack(lambda: {
+            "time": rwkv_mod.init_rwkv_state(batch, cfg.rwkv, dtype),
+            "chan": jnp.zeros((batch, 1, cfg.d_model), dtype)},
+            cfg.num_layers)
+    if cfg.family == "hybrid":
+        groups, per = _hybrid_group_shape(cfg)
+        mamba = stack(lambda: ssm_mod.init_ssm_state(batch, cfg.ssm, dtype),
+                      cfg.num_layers)
+        mamba = jax.tree.map(
+            lambda a: a.reshape(groups, per, *a.shape[1:]), mamba)
+        shared = stack(lambda: attn_mod.init_kv_cache(batch, cfg.attn,
+                                                      max_seq, dtype), groups)
+        return {"mamba": mamba, "shared": shared}
+    if cfg.mla is not None:
+        return stack(lambda: mla_mod.init_mla_cache(batch, cfg.mla, max_seq,
+                                                    dtype), cfg.num_layers)
+    return stack(lambda: attn_mod.init_kv_cache(batch, cfg.attn, max_seq,
+                                                dtype), cfg.num_layers)
+
+
+def lm_decode_step(params: Params, cache, tokens: jax.Array, pos: jax.Array,
+                   cfg: ArchConfig):
+    """tokens: (B, 1) -> (logits (B, V), new cache). pos: (B,)."""
+    x = embed(params["embed"], tokens, cfg.dtype)
+    x = shard_batch(x, None, None)
+
+    if cfg.family == "rwkv":
+        def body(x, ps):
+            p, st = ps
+            y, st = _rwkv_block_decode(p, x, st, cfg)
+            return y, st
+        x, cache = lscan(cfg, body, x, (params["blocks"], cache))
+    elif cfg.family == "hybrid":
+        groups, per = _hybrid_group_shape(cfg)
+        blocks = _regroup(params["blocks"], groups, per)
+        shared = params["shared"]
+        s_cfg = cfg.replace(moe=None, mla=None, family="dense")
+
+        def group(x, ps):
+            gp, st_m, st_a = ps
+
+            def inner(x, qs):
+                p, st = qs
+                y, st = _mamba_block_decode(p, x, st, cfg)
+                return y, st
+            x, st_m = lscan(cfg, inner, x, (gp, st_m))
+            x, st_a = _dense_block_decode(shared, x, st_a, pos, s_cfg)
+            return x, (st_m, st_a)
+        x, (st_m, st_a) = lscan(cfg, 
+            group, x, (blocks, cache["mamba"], cache["shared"]))
+        cache = {"mamba": st_m, "shared": st_a}
+    else:
+        def body(x, ps):
+            p, st = ps
+            y, st = _dense_block_decode(p, x, st, pos, cfg)
+            return y, st
+        x, cache = lscan(cfg, body, x, (params["blocks"], cache))
+
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], x[:, 0])
+    return logits, cache
+
+
+def lm_prefill(params: Params, batch: dict[str, jax.Array], cfg: ArchConfig):
+    """Inference forward over a prompt; returns last-position logits.
+    (Cache materialization for mid-sequence restart is handled by the
+    serving engine; the dry-run lowers this forward as the prefill cost.)"""
+    x, _ = lm_forward(params, batch, cfg,
+                      use_flash=batch["tokens"].shape[1] > 8192)
+    logits = unembed(params["embed"], x[:, -1])
+    return logits

@@ -1,0 +1,169 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+KV is compressed to a ``kv_lora``-dim latent c_kv (plus a shared RoPE key of
+``qk_rope`` dims); the cache stores only (c_kv, k_rope) per token. Decode uses
+the *absorbed* formulation: W_uk folds into the query and W_uv into the
+output projection, so attention runs directly against the latent cache —
+the paper's serving-efficiency trick, implemented faithfully.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (BATCH, MODEL, apply_rope, init_rmsnorm,
+                                 normal_leaf, rmsnorm, shard)
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    d_model: int
+    n_heads: int
+    q_lora: int = 1536
+    kv_lora: int = 512
+    qk_nope: int = 128
+    qk_rope: int = 64
+    v_head: int = 128
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-6
+
+    @property
+    def qk_head(self) -> int:
+        return self.qk_nope + self.qk_rope
+
+
+def init_mla(key, cfg: MLAConfig, dtype=jnp.float32):
+    keys = jax.random.split(key, 6)
+    d, h = cfg.d_model, cfg.n_heads
+    return {
+        "w_dq": normal_leaf(keys[0], (d, cfg.q_lora), (None, MODEL),
+                            dtype=dtype),
+        "q_norm": init_rmsnorm(cfg.q_lora, dtype),
+        "w_uq": normal_leaf(keys[1], (cfg.q_lora, h, cfg.qk_head),
+                            (None, MODEL, None), dtype=dtype),
+        # joint down-proj: latent c_kv (kv_lora) + shared rope key (qk_rope)
+        "w_dkv": normal_leaf(keys[2], (d, cfg.kv_lora + cfg.qk_rope),
+                             (None, None), dtype=dtype),
+        "kv_norm": init_rmsnorm(cfg.kv_lora, dtype),
+        "w_uk": normal_leaf(keys[3], (cfg.kv_lora, h, cfg.qk_nope),
+                            (None, MODEL, None), dtype=dtype),
+        "w_uv": normal_leaf(keys[4], (cfg.kv_lora, h, cfg.v_head),
+                            (None, MODEL, None), dtype=dtype),
+        "wo": normal_leaf(keys[5], (h, cfg.v_head, d), (MODEL, None, None),
+                          scale=(h * cfg.v_head) ** -0.5, dtype=dtype),
+    }
+
+
+def _latent(params, x, cfg: MLAConfig, positions):
+    """x (B,S,D) -> (c_kv (B,S,kv_lora), k_rope (B,S,1,qk_rope))."""
+    dkv = jnp.einsum("bsd,de->bse", x, params["w_dkv"].astype(x.dtype))
+    c_kv, k_rope = jnp.split(dkv, [cfg.kv_lora], axis=-1)
+    c_kv = rmsnorm(params["kv_norm"], c_kv, cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)
+    return c_kv, k_rope
+
+
+def _queries(params, x, cfg: MLAConfig, positions):
+    cq = jnp.einsum("bsd,de->bse", x, params["w_dq"].astype(x.dtype))
+    cq = rmsnorm(params["q_norm"], cq, cfg.norm_eps)
+    q = jnp.einsum("bse,ehf->bshf", cq, params["w_uq"].astype(x.dtype))
+    q_nope, q_rope = jnp.split(q, [cfg.qk_nope], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_attention(params, x: jax.Array, cfg: MLAConfig) -> jax.Array:
+    """Training / prefill path (naive, materializes per-head K/V)."""
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    q_nope, q_rope = _queries(params, x, cfg, positions)
+    c_kv, k_rope = _latent(params, x, cfg, positions)
+    k_nope = jnp.einsum("bse,ehf->bshf", c_kv, params["w_uk"].astype(x.dtype))
+    v = jnp.einsum("bse,ehf->bshf", c_kv, params["w_uv"].astype(x.dtype))
+    q_nope = shard(q_nope, BATCH, None, MODEL, None)
+    k_nope = shard(k_nope, BATCH, None, MODEL, None)
+    scale = cfg.qk_head ** -0.5
+    logits = (jnp.einsum("bshf,bthf->bhst", q_nope, k_nope) +
+              jnp.einsum("bshf,btof->bhst", q_rope,
+                         jnp.broadcast_to(k_rope[:, :, 0:1, :],
+                                          k_rope.shape))
+              ).astype(jnp.float32) * scale
+    qi = jnp.arange(s)[:, None]
+    logits = logits + jnp.where(jnp.arange(s)[None] <= qi, 0.0,
+                                NEG_INF)[None, None]
+    probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhst,bthf->bshf", probs, v)
+    out = shard(out, BATCH, None, MODEL, None)
+    return jnp.einsum("bshf,hfd->bsd", out, params["wo"].astype(x.dtype))
+
+
+def mla_flash_attention(params, x: jax.Array, cfg: MLAConfig,
+                        kv_chunk: int = 512) -> jax.Array:
+    """Long-prefill MLA: per-head K/V are materialized (cheap: S*H*d) but
+    the (S,S) scores never are — q/k concat the nope+rope dims and run
+    through the shared ``flash_core``."""
+    from repro.models.attention import flash_core
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    q_nope, q_rope = _queries(params, x, cfg, positions)
+    c_kv, k_rope = _latent(params, x, cfg, positions)
+    k_nope = jnp.einsum("bse,ehf->bshf", c_kv, params["w_uk"].astype(x.dtype))
+    v = jnp.einsum("bse,ehf->bshf", c_kv, params["w_uv"].astype(x.dtype))
+    h = cfg.n_heads
+    q_cat = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_cat = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (b, s, h, cfg.qk_rope))], axis=-1)
+    q_cat = shard(q_cat, BATCH, None, MODEL, None)
+    k_cat = shard(k_cat, BATCH, None, MODEL, None)
+    out = flash_core(q_cat, k_cat, v, scale=cfg.qk_head ** -0.5,
+                     causal=True, kv_chunk=kv_chunk)
+    out = shard(out, BATCH, None, MODEL, None)
+    return jnp.einsum("bshf,hfd->bsd", out, params["wo"].astype(x.dtype))
+
+
+def mla_decode(params, x: jax.Array, cache: dict[str, jax.Array],
+               pos: jax.Array, cfg: MLAConfig
+               ) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """Absorbed decode: scores = (q_nope W_uk^T) @ c_cache + q_rope @ k_rope.
+
+    cache: {"c": (B, S, kv_lora), "kr": (B, S, qk_rope)}; x: (B, 1, D).
+    Per-step cost is O(S * (kv_lora + qk_rope)) per head pair — the MLA
+    serving win: no per-head K/V are ever materialized.
+    """
+    b = x.shape[0]
+    q_nope, q_rope = _queries(params, x, cfg, pos[:, None])
+    c_new, kr_new = _latent(params, x, cfg, pos[:, None])
+
+    s_cache = cache["c"].shape[1]
+    onehot = jax.nn.one_hot(pos, s_cache, dtype=cache["c"].dtype)
+    c = cache["c"] * (1 - onehot)[..., None] + \
+        onehot[..., None] * c_new[:, 0:1].astype(cache["c"].dtype)
+    kr = cache["kr"] * (1 - onehot)[..., None] + \
+        onehot[..., None] * kr_new[:, 0, :, :].astype(cache["kr"].dtype)
+
+    # absorb W_uk into the query: (B,1,H,nope) x (kv_lora,H,nope) -> latent q
+    q_lat = jnp.einsum("bshf,ehf->bshe", q_nope,
+                       params["w_uk"].astype(x.dtype))     # (B,1,H,kv_lora)
+    scale = cfg.qk_head ** -0.5
+    logits = (jnp.einsum("bshe,bte->bhst", q_lat, c.astype(x.dtype)) +
+              jnp.einsum("bshf,btf->bhst", q_rope, kr.astype(x.dtype))
+              ).astype(jnp.float32) * scale
+    valid = jnp.arange(s_cache)[None] <= pos[:, None]
+    logits = logits + jnp.where(valid, 0.0, NEG_INF)[:, None, None, :]
+    probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    # attend in latent space, then absorb W_uv on the way out
+    out_lat = jnp.einsum("bhst,bte->bshe", probs, c.astype(x.dtype))
+    out = jnp.einsum("bshe,ehf->bshf", out_lat,
+                     params["w_uv"].astype(x.dtype))       # (B,1,H,v_head)
+    out = jnp.einsum("bshf,hfd->bsd", out, params["wo"].astype(x.dtype))
+    return out, {"c": c, "kr": kr}
+
+
+def init_mla_cache(batch: int, cfg: MLAConfig, max_seq: int,
+                   dtype=jnp.bfloat16) -> dict[str, jax.Array]:
+    return {"c": jnp.zeros((batch, max_seq, cfg.kv_lora), dtype),
+            "kr": jnp.zeros((batch, max_seq, cfg.qk_rope), dtype)}

@@ -1,0 +1,48 @@
+"""Feed-forward layers: SwiGLU (llama/qwen/mixtral family) and GELU (whisper).
+
+Tensor parallel: hidden dim F shards over "model"; the down projection
+reduces over the sharded dim (XLA inserts the reduce-scatter/all-reduce).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import BATCH, MODEL, normal_leaf, shard, zeros_leaf
+
+
+def init_swiglu(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    kg, ku, kd = jax.random.split(key, 3)
+    return {
+        "w_gate": normal_leaf(kg, (d_model, d_ff), (None, MODEL), dtype=dtype),
+        "w_up": normal_leaf(ku, (d_model, d_ff), (None, MODEL), dtype=dtype),
+        "w_down": normal_leaf(kd, (d_ff, d_model), (MODEL, None),
+                              scale=d_ff ** -0.5, dtype=dtype),
+    }
+
+
+def swiglu(params, x: jax.Array) -> jax.Array:
+    g = jnp.einsum("bsd,df->bsf", x, params["w_gate"].astype(x.dtype))
+    u = jnp.einsum("bsd,df->bsf", x, params["w_up"].astype(x.dtype))
+    h = jax.nn.silu(g) * u
+    h = shard(h, BATCH, None, MODEL)
+    return jnp.einsum("bsf,fd->bsd", h, params["w_down"].astype(x.dtype))
+
+
+def init_gelu_mlp(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    ki, ko = jax.random.split(key)
+    return {
+        "w_in": normal_leaf(ki, (d_model, d_ff), (None, MODEL), dtype=dtype),
+        "b_in": zeros_leaf((d_ff,), (MODEL,), dtype),
+        "w_out": normal_leaf(ko, (d_ff, d_model), (MODEL, None),
+                             scale=d_ff ** -0.5, dtype=dtype),
+        "b_out": zeros_leaf((d_model,), (None,), dtype),
+    }
+
+
+def gelu_mlp(params, x: jax.Array) -> jax.Array:
+    h = jnp.einsum("bsd,df->bsf", x, params["w_in"].astype(x.dtype)) \
+        + params["b_in"].astype(x.dtype)
+    h = jax.nn.gelu(shard(h, BATCH, None, MODEL))
+    return jnp.einsum("bsf,fd->bsd", h, params["w_out"].astype(x.dtype)) \
+        + params["b_out"].astype(x.dtype)

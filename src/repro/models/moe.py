@@ -1,0 +1,272 @@
+"""Mixture-of-Experts with true expert parallelism (shard_map + all-to-all).
+
+Physical expert layout: ``(M, E_loc, D, F_loc)`` where M is the mesh "model"
+axis size. Two regimes fall out of one code path:
+
+* **E >= M (DeepSeek-V2: 160 experts / 16 shards)** — classic EP:
+  ``E_loc = E/M`` experts per shard, full F. Tokens all-to-all to the shard
+  owning their expert.
+* **E <  M (Mixtral: 8 experts / 16 shards)** — TP-within-expert pairs:
+  ``tp = M/E`` shards each hold an F-slice of one expert; a routed token is
+  sent to *all* tp slices and the partial down-projections sum on return
+  (the combine IS the TP all-reduce).
+
+Tokens are sequence-split over the "model" axis inside the layer (each
+(data, model) shard routes its own B_loc x S_loc tokens), capacity-bounded
+with static shapes, dispatched by scatter (no (T, E, C) one-hot tensors).
+Shared experts (DeepSeek) run densely outside the shard_map via standard TP.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import MODEL, normal_leaf
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared: int = 0              # DeepSeek shared experts (always-on)
+    capacity_factor: float = 1.25
+    model_shards: int = 1          # mesh "model" axis size M (physical)
+    router_dtype: type = jnp.float32
+
+    @property
+    def tp(self) -> int:
+        return max(1, self.model_shards // self.num_experts)
+
+    @property
+    def e_loc(self) -> int:
+        return max(1, self.num_experts // self.model_shards)
+
+    @property
+    def f_loc(self) -> int:
+        assert self.d_ff_expert % self.tp == 0
+        return self.d_ff_expert // self.tp
+
+    def capacity(self, local_tokens: int) -> int:
+        c = int(local_tokens * self.top_k / self.num_experts
+                * self.capacity_factor)
+        return max(4, -(-c // 4) * 4)
+
+
+def init_moe(key, cfg: MoEConfig, dtype=jnp.float32):
+    """Experts in device-local physical layout (M, E_loc, D, F_loc):
+    shard m holds expert (m // tp) F-slice (m % tp)  [E < M regime]
+    or experts [m*E_loc, (m+1)*E_loc) with full F     [E >= M regime]."""
+    kr, kg, ku, kd, ks = jax.random.split(key, 5)
+    m, el, fl = cfg.model_shards, cfg.e_loc, cfg.f_loc
+    d = cfg.d_model
+    spec = (MODEL, None, None, None)
+    p = {
+        "router": normal_leaf(kr, (d, cfg.num_experts), (None, None),
+                              scale=0.02, dtype=jnp.float32),
+        "w_gate": normal_leaf(kg, (m, el, d, fl), spec, scale=d ** -0.5,
+                              dtype=dtype),
+        "w_up": normal_leaf(ku, (m, el, d, fl), spec, scale=d ** -0.5,
+                            dtype=dtype),
+        "w_down": normal_leaf(kd, (m, el, fl, d), (MODEL, None, None, None),
+                              scale=cfg.d_ff_expert ** -0.5, dtype=dtype),
+    }
+    if cfg.n_shared:
+        from repro.models.mlp import init_swiglu
+        p["shared"] = init_swiglu(ks, d, cfg.d_ff_expert * cfg.n_shared,
+                                  dtype)
+    return p
+
+
+def _route(router_w, x_flat: jax.Array, cfg: MoEConfig):
+    logits = x_flat.astype(cfg.router_dtype) @ router_w
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, experts = jax.lax.top_k(probs, cfg.top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balance aux loss
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(experts[:, 0], cfg.num_experts,
+                                 dtype=probs.dtype), axis=0)
+    aux = cfg.num_experts * jnp.sum(me * ce)
+    return gates.astype(x_flat.dtype), experts, aux
+
+
+def _expert_positions(flat_e: jax.Array, num_experts: int):
+    """Slot position of each (token, choice) within its expert's buffer."""
+    nk = flat_e.shape[0]
+    order = jnp.argsort(flat_e)
+    sorted_e = flat_e[order]
+    start = jnp.searchsorted(sorted_e, jnp.arange(num_experts))
+    pos_sorted = jnp.arange(nk) - start[sorted_e]
+    return jnp.zeros((nk,), jnp.int32).at[order].set(
+        pos_sorted.astype(jnp.int32))
+
+
+def _local_moe(x_loc, router_w, w_gate, w_up, w_down, cfg: MoEConfig,
+               model_axis: str | None):
+    """Per-shard MoE body. x_loc: (B_l, S_l, D); weights: local slices
+    (1, E_loc, D, F_loc). Runs identically with model_axis=None (no mesh)."""
+    bl, sl, d = x_loc.shape
+    n = bl * sl
+    xf = x_loc.reshape(n, d)
+    gates, experts, aux = _route(router_w, xf, cfg)
+
+    m, el, tp = cfg.model_shards, cfg.e_loc, cfg.tp
+    cap = cfg.capacity(n)
+    k = cfg.top_k
+    flat_e = experts.reshape(-1)                                  # (n*k,)
+    pos = _expert_positions(flat_e, cfg.num_experts)
+    keep = pos < cap
+
+    # destination shard(s) + local expert index; tp copies duplicate the token
+    if cfg.num_experts >= m:
+        dest = (flat_e // el)[:, None]                            # (n*k, 1)
+        e_idx = (flat_e % el)[:, None]
+    else:
+        dest = flat_e[:, None] * tp + jnp.arange(tp)[None, :]     # (n*k, tp)
+        e_idx = jnp.zeros_like(dest)
+    slot = dest * (el * cap) + e_idx * cap + pos[:, None]         # (n*k, tp)
+    slot = jnp.where(keep[:, None], slot, m * el * cap)           # drop row
+
+    tok = jnp.arange(n, dtype=jnp.int32).repeat(k)                # (n*k,)
+    x_rep = xf[tok]                                               # (n*k, D)
+    send = jnp.zeros((m * el * cap + 1, d), x_loc.dtype)
+    for j in range(tp):
+        send = send.at[slot[:, j]].set(x_rep, mode="drop")
+    send = send[:-1].reshape(m, el * cap, d)
+
+    if model_axis is not None:
+        recv = jax.lax.all_to_all(send, model_axis, split_axis=0,
+                                  concat_axis=0, tiled=False)
+    else:
+        recv = send                                               # M == 1
+    xe = recv.reshape(m, el, cap, d).transpose(1, 0, 2, 3) \
+        .reshape(el, m * cap, d)
+
+    wg, wu, wd = w_gate[0], w_up[0], w_down[0]                    # local slice
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, wg.astype(xe.dtype))) * \
+        jnp.einsum("ecd,edf->ecf", xe, wu.astype(xe.dtype))
+    ye = jnp.einsum("ecf,efd->ecd", h, wd.astype(xe.dtype))
+
+    back = ye.reshape(el, m, cap, d).transpose(1, 0, 2, 3) \
+        .reshape(m, el * cap, d)
+    if model_axis is not None:
+        ret = jax.lax.all_to_all(back, model_axis, split_axis=0,
+                                 concat_axis=0, tiled=False)
+    else:
+        ret = back
+    ret = jnp.concatenate([ret.reshape(m * el * cap, d),
+                           jnp.zeros((1, d), ret.dtype)], axis=0)
+
+    y_tok = jnp.zeros((n, d), x_loc.dtype)
+    for j in range(tp):
+        # for tp > 1 the partial down-projections of the F-slices sum here —
+        # this addition IS the tensor-parallel all-reduce of the expert MLP.
+        contrib = ret[slot[:, j]] * (gates.reshape(-1)[:, None]
+                                     * keep[:, None].astype(x_loc.dtype))
+        y_tok = y_tok.at[tok].add(contrib)
+    return y_tok.reshape(bl, sl, d), aux
+
+
+def _local_moe_replicated(x_loc, router_w, w_gate, w_up, w_down,
+                          cfg: MoEConfig, model_axis: str | None):
+    """Decode-time path: tokens replicated over the model axis (S == 1 can't
+    sequence-split). Every shard routes every local token, scatters ONLY the
+    tokens destined for its own experts, computes, and the combine is a psum
+    over 'model' (which also sums the TP F-slices when E < M)."""
+    bl, sl, d = x_loc.shape
+    n = bl * sl
+    xf = x_loc.reshape(n, d)
+    gates, experts, aux = _route(router_w, xf, cfg)
+
+    m, el, tp = cfg.model_shards, cfg.e_loc, cfg.tp
+    cap = cfg.capacity(n)
+    k = cfg.top_k
+    flat_e = experts.reshape(-1)
+    pos = _expert_positions(flat_e, cfg.num_experts)
+    keep = pos < cap
+    my = jax.lax.axis_index(model_axis) if model_axis is not None else 0
+    if cfg.num_experts >= m:
+        mine = (flat_e // el) == my
+        e_idx = flat_e % el
+    else:
+        mine = (flat_e * tp <= my) & (my < flat_e * tp + tp)
+        e_idx = jnp.zeros_like(flat_e)
+    slot = jnp.where(mine & keep, e_idx * cap + pos, el * cap)
+
+    tok = jnp.arange(n, dtype=jnp.int32).repeat(k)
+    send = jnp.zeros((el * cap + 1, d), x_loc.dtype).at[slot].set(xf[tok])
+    xe = send[:-1].reshape(el, cap, d)
+    wg, wu, wd = w_gate[0], w_up[0], w_down[0]
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, wg.astype(xe.dtype))) * \
+        jnp.einsum("ecd,edf->ecf", xe, wu.astype(xe.dtype))
+    ye = jnp.einsum("ecf,efd->ecd", h, wd.astype(xe.dtype))
+    ret = jnp.concatenate([ye.reshape(el * cap, d),
+                           jnp.zeros((1, d), ye.dtype)], axis=0)
+    contrib = ret[slot] * (gates.reshape(-1)[:, None]
+                           * (mine & keep)[:, None].astype(x_loc.dtype))
+    y_tok = jnp.zeros((n, d), x_loc.dtype).at[tok].add(contrib)
+    if model_axis is not None:
+        y_tok = jax.lax.psum(y_tok, model_axis)
+    return y_tok.reshape(bl, sl, d), aux
+
+
+def moe_apply(params, x: jax.Array, cfg: MoEConfig
+              ) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (y, aux load-balance loss)."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        names = tuple(mesh.axis_names) if not mesh.empty else ()
+    except Exception:
+        names = ()
+
+    if MODEL in names:
+        sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+        batch = tuple(a for a in ("pod", "data") if a in names) or None
+        b_size = 1
+        for a in (batch or ()):
+            b_size *= sizes.get(a, 1)
+        if batch and x.shape[0] % b_size != 0:
+            batch = None                      # tiny decode batch: replicate
+        seq_split = x.shape[1] % max(cfg.model_shards, 1) == 0 and \
+            x.shape[1] >= cfg.model_shards
+        w_spec = P(MODEL, None, None, None)
+
+        if seq_split:                          # training / prefill: EP a2a
+            x_spec = P(batch, MODEL, None)
+            vary = tuple(a for a in names if a in
+                         (("pod", "data", MODEL) if batch else (MODEL,)))
+
+            def body(xl, r, wg, wu, wd):
+                y, aux = _local_moe(xl, r, wg, wu, wd, cfg, MODEL)
+                return y, jax.lax.pmean(aux, vary)
+        else:                                  # decode: replicated routing
+            x_spec = P(batch, None, None)
+            vary = tuple(a for a in names if a in
+                         (("pod", "data") if batch else ()))
+
+            def body(xl, r, wg, wu, wd):
+                y, aux = _local_moe_replicated(xl, r, wg, wu, wd, cfg,
+                                               MODEL)
+                return y, (jax.lax.pmean(aux, vary) if vary else aux)
+
+        y, aux = jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(x_spec, P(None, None), w_spec, w_spec, w_spec),
+            out_specs=(x_spec, P()),
+        )(x, params["router"], params["w_gate"], params["w_up"],
+          params["w_down"])
+    else:
+        assert cfg.model_shards == 1, (
+            "MoEConfig.model_shards must match the mesh 'model' axis size")
+        y, aux = _local_moe(x, params["router"], params["w_gate"],
+                            params["w_up"], params["w_down"], cfg, None)
+
+    if cfg.n_shared:
+        from repro.models.mlp import swiglu
+        y = y + swiglu(params["shared"], x)
+    return y, aux

@@ -1,0 +1,193 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892): attention-free time-mix with
+data-dependent per-channel decay, plus the RWKV channel-mix FFN.
+
+Recurrence per head (dk = dv = head_dim):
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t          S: (dk, dv)
+    o_t = r_t @ (diag(u) k_t^T v_t + S_{t-1})
+Training/prefill uses the chunked form (intra-chunk matrix + inter-chunk
+state), decode the recurrent form. Heads shard over "model".
+
+Simplifications vs. the released model (documented in DESIGN.md): the
+low-rank ddlerp token-shift mixers are collapsed to per-channel mix weights,
+and the decay LoRA to a direct projection — the temporal dataflow (the part
+the E2ATST architecture cares about) is preserved exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (BATCH, MODEL, full_leaf, init_layernorm,
+                                 layernorm, normal_leaf, ones_leaf, shard,
+                                 zeros_leaf)
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKVConfig:
+    d_model: int
+    d_ff: int
+    head_dim: int = 64
+    chunk: int = 64
+    norm_eps: float = 1e-5
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_model // self.head_dim
+
+
+def init_rwkv_time_mix(key, cfg: RWKVConfig, dtype=jnp.float32):
+    keys = jax.random.split(key, 6)
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    return {
+        # token-shift interpolation weights for r/k/v/w/g
+        "mu": ones_leaf((5, d), (None, None), dtype),
+        "w_r": normal_leaf(keys[0], (d, d), (None, MODEL), dtype=dtype),
+        "w_k": normal_leaf(keys[1], (d, d), (None, MODEL), dtype=dtype),
+        "w_v": normal_leaf(keys[2], (d, d), (None, MODEL), dtype=dtype),
+        "w_g": normal_leaf(keys[3], (d, d), (None, MODEL), dtype=dtype),
+        # data-dependent decay projection (w_t = exp(-exp(decay)))
+        "w_decay": normal_leaf(keys[4], (d, d), (None, MODEL), scale=0.01,
+                               dtype=dtype),
+        # bias -5 => initial decay exp(-exp(-5)) ~ 0.993 (slow forgetting)
+        "decay_bias": full_leaf((d,), -5.0, (None,), jnp.float32),
+        "u_bonus": zeros_leaf((h, hd), (MODEL, None), jnp.float32),
+        "w_out": normal_leaf(keys[5], (d, d), (MODEL, None), dtype=dtype),
+        "ln_x": init_layernorm(d, dtype),
+    }
+
+
+def _token_shift(x: jax.Array, x_prev: jax.Array | None = None) -> jax.Array:
+    """Shift sequence right by one; x_prev supplies the carry for decode."""
+    if x_prev is None:
+        return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    return jnp.concatenate([x_prev, x[:, :-1]], axis=1)
+
+
+def _rkvwg(params, x, shifted, cfg: RWKVConfig):
+    mu = params["mu"].astype(x.dtype)
+    mix = [x * mu[i] + shifted * (1 - mu[i]) for i in range(5)]
+    r = jnp.einsum("bsd,de->bse", mix[0], params["w_r"].astype(x.dtype))
+    k = jnp.einsum("bsd,de->bse", mix[1], params["w_k"].astype(x.dtype))
+    v = jnp.einsum("bsd,de->bse", mix[2], params["w_v"].astype(x.dtype))
+    lw = -jnp.exp(jnp.einsum("bsd,de->bse", mix[3],
+                             params["w_decay"].astype(x.dtype)
+                             ).astype(jnp.float32)
+                  + params["decay_bias"])                 # log w_t <= 0
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", mix[4],
+                               params["w_g"].astype(x.dtype)))
+    return r, k, v, lw, g
+
+
+def rwkv_time_mix(params, x: jax.Array, cfg: RWKVConfig) -> jax.Array:
+    """Chunked WKV. x: (B, S, D) -> (B, S, D)."""
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    r, k, v, lw, g = _rkvwg(params, x, _token_shift(x), cfg)
+    rh = r.reshape(b, s, h, hd).astype(jnp.float32)
+    kh = k.reshape(b, s, h, hd).astype(jnp.float32)
+    vh = v.reshape(b, s, h, hd).astype(jnp.float32)
+    lwh = lw.reshape(b, s, h, hd)                          # per-channel decay
+    u = params["u_bonus"]                                  # (H, hd)
+
+    ck = cfg.chunk if s % cfg.chunk == 0 else s
+    nc = s // ck
+    rc = rh.reshape(b, nc, ck, h, hd)
+    kc = kh.reshape(b, nc, ck, h, hd)
+    vc = vh.reshape(b, nc, ck, h, hd)
+    lc = lwh.reshape(b, nc, ck, h, hd)
+
+    cum = jnp.cumsum(lc, axis=2)                           # inclusive
+    total = cum[:, :, -1]                                  # (B,nc,H,hd)
+    excl = cum - lc                                        # exclusive
+
+    # intra-chunk: o_t = sum_{i<t} (r_t*exp(excl_t)) . (k_i*exp(-cum_i)) v_i
+    #              + (r_t*u) . k_t v_t
+    r_dec = rc * jnp.exp(excl)
+    k_dec = kc * jnp.exp(-cum)
+    scores = jnp.einsum("bnchd,bnihd->bnhci", r_dec, k_dec)
+    mask = jnp.tril(jnp.ones((ck, ck), bool), k=-1)        # strictly lower
+    scores = jnp.where(mask[None, None, None], scores, 0.0)
+    y_intra = jnp.einsum("bnhci,bnihd->bnchd", scores, vc)
+    bonus = jnp.einsum("bnchd,bnchd->bnch", rc * u[None, None, None], kc)
+    y_intra = y_intra + bonus[..., None] * vc
+
+    # chunk state: S_next = diag(exp(total)) S + sum_i (k_i exp(total-cum_i))^T v_i
+    k_tail = kc * jnp.exp(total[:, :, None] - cum)
+    s_chunk = jnp.einsum("bnihd,bnihe->bnhde", k_tail, vc)
+
+    def scan_fn(s_prev, inp):
+        s_c, tot = inp
+        s_new = s_prev * jnp.exp(tot)[..., None] + s_c
+        return s_new, s_prev
+
+    s0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+    _, s_prevs = jax.lax.scan(
+        scan_fn, s0, (s_chunk.transpose(1, 0, 2, 3, 4),
+                      total.transpose(1, 0, 2, 3)))
+    s_prevs = s_prevs.transpose(1, 0, 2, 3, 4)             # (B,nc,H,hd,hd)
+
+    y_inter = jnp.einsum("bnchd,bnhde->bnche", r_dec, s_prevs)
+    y = (y_intra + y_inter).reshape(b, s, h, hd)
+
+    y = y.reshape(b, s, d).astype(x.dtype)
+    y = layernorm(params["ln_x"], y, cfg.norm_eps) * g
+    y = shard(y, BATCH, None, MODEL)
+    return jnp.einsum("bse,ed->bsd", y, params["w_out"].astype(x.dtype))
+
+
+def rwkv_time_mix_decode(params, x: jax.Array, state: dict, cfg: RWKVConfig):
+    """One step. state: {"s": (B,H,hd,hd) fp32, "x_prev": (B,1,D)}."""
+    b, _, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    r, k, v, lw, g = _rkvwg(params, x, _token_shift(x, state["x_prev"]), cfg)
+    rh = r.reshape(b, h, hd).astype(jnp.float32)
+    kh = k.reshape(b, h, hd).astype(jnp.float32)
+    vh = v.reshape(b, h, hd).astype(jnp.float32)
+    w = jnp.exp(lw.reshape(b, h, hd))                      # (B,H,hd) in (0,1)
+    u = params["u_bonus"]
+    kv = jnp.einsum("bhd,bhe->bhde", kh, vh)
+    y = jnp.einsum("bhd,bhde->bhe", rh, state["s"] + u[None, ..., None] * kv)
+    s_new = state["s"] * w[..., None] + kv
+    y = y.reshape(b, 1, d).astype(x.dtype)
+    y = layernorm(params["ln_x"], y, cfg.norm_eps) * g
+    out = jnp.einsum("bse,ed->bsd", y, params["w_out"].astype(x.dtype))
+    return out, {"s": s_new, "x_prev": x}
+
+
+def init_rwkv_state(batch: int, cfg: RWKVConfig, dtype=jnp.float32):
+    return {"s": jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.head_dim),
+                           jnp.float32),
+            "x_prev": jnp.zeros((batch, 1, cfg.d_model), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# Channel mix (RWKV FFN)
+# ---------------------------------------------------------------------------
+
+def init_rwkv_channel_mix(key, cfg: RWKVConfig, dtype=jnp.float32):
+    kk, kv, kr = jax.random.split(key, 3)
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "mu": ones_leaf((2, d), (None, None), dtype),
+        "w_k": normal_leaf(kk, (d, f), (None, MODEL), dtype=dtype),
+        "w_v": normal_leaf(kv, (f, d), (MODEL, None), scale=f ** -0.5,
+                           dtype=dtype),
+        "w_r": normal_leaf(kr, (d, d), (None, None), dtype=dtype),
+    }
+
+
+def rwkv_channel_mix(params, x: jax.Array, cfg: RWKVConfig,
+                     x_prev: jax.Array | None = None):
+    shifted = _token_shift(x, x_prev)
+    mu = params["mu"].astype(x.dtype)
+    xk = x * mu[0] + shifted * (1 - mu[0])
+    xr = x * mu[1] + shifted * (1 - mu[1])
+    k = jnp.einsum("bsd,df->bsf", xk, params["w_k"].astype(x.dtype))
+    k = jnp.square(jax.nn.relu(k))
+    k = shard(k, BATCH, None, MODEL)
+    kv = jnp.einsum("bsf,fd->bsd", k, params["w_v"].astype(x.dtype))
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr,
+                                  params["w_r"].astype(x.dtype)))
+    return r * kv

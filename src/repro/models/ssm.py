@@ -1,0 +1,172 @@
+"""Mamba2 (SSD) mixer for the Zamba2 hybrid architecture (arXiv:2411.15242).
+
+State-space dynamics per head (scalar decay a_t = exp(-dt_t * A_h)):
+    h_t = a_t * h_{t-1} + dt_t * x_t B_t^T        h: (d_head, d_state)
+    y_t = h_t C_t + D_h * x_t
+computed with the chunked SSD algorithm: intra-chunk quadratic attention-like
+term + inter-chunk state passing — O(S * chunk) instead of O(S^2), and a
+single-step recurrent path for decode.
+
+Sharding: heads shard over "model"; the conv and projections follow.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (BATCH, MODEL, normal_leaf, ones_leaf, shard,
+                                 zeros_leaf)
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_model: int
+    d_state: int = 64
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    chunk: int = 128
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+
+def init_ssm(key, cfg: SSMConfig, dtype=jnp.float32):
+    keys = jax.random.split(key, 4)
+    d, di, h, ds = cfg.d_model, cfg.d_inner, cfg.n_heads, cfg.d_state
+    # in_proj packs [z (di), x (di), B (ds), C (ds), dt (h)]
+    return {
+        "w_in": normal_leaf(keys[0], (d, 2 * di + 2 * ds + h),
+                            (None, MODEL), dtype=dtype),
+        "conv_w": normal_leaf(keys[1], (cfg.d_conv, di + 2 * ds),
+                              (None, MODEL), scale=cfg.d_conv ** -0.5,
+                              dtype=dtype),
+        "conv_b": zeros_leaf((di + 2 * ds,), (MODEL,), dtype),
+        "a_log": zeros_leaf((h,), (MODEL,), jnp.float32),
+        "dt_bias": zeros_leaf((h,), (MODEL,), jnp.float32),
+        "d_skip": ones_leaf((h,), (MODEL,), jnp.float32),
+        "w_out": normal_leaf(keys[2], (di, d), (MODEL, None),
+                             scale=di ** -0.5, dtype=dtype),
+    }
+
+
+def _split_proj(params, x, cfg: SSMConfig):
+    di, ds, h = cfg.d_inner, cfg.d_state, cfg.n_heads
+    zxbcdt = jnp.einsum("bsd,de->bse", x, params["w_in"].astype(x.dtype))
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * ds], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(params, xbc, cfg: SSMConfig):
+    """Depthwise causal conv over sequence, kernel d_conv."""
+    w = params["conv_w"].astype(xbc.dtype)                 # (K, C)
+    pad = jnp.pad(xbc, ((0, 0), (cfg.d_conv - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i] for i in
+              range(cfg.d_conv))
+    return jax.nn.silu(out + params["conv_b"].astype(xbc.dtype))
+
+
+def ssm_mixer(params, x: jax.Array, cfg: SSMConfig) -> jax.Array:
+    """Training / prefill path (chunked SSD). x: (B, S, D)."""
+    b, s, d = x.shape
+    di, ds, h, hd = cfg.d_inner, cfg.d_state, cfg.n_heads, cfg.head_dim
+    z, xbc, dt = _split_proj(params, x, cfg)
+    xbc = _causal_conv(params, xbc, cfg)
+    xin, bmat, cmat = jnp.split(xbc, [di, di + ds], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"])              # (B, S, H)
+    a = -jnp.exp(params["a_log"])                          # (H,) negative
+    la = dt * a[None, None]                                # log decay <= 0
+
+    xh = xin.reshape(b, s, h, hd).astype(jnp.float32)
+    xh = xh * dt[..., None]                                # dt folded into x
+    bmat = bmat.astype(jnp.float32)                        # (B, S, ds) shared
+    cmat = cmat.astype(jnp.float32)
+
+    ck = cfg.chunk if s % cfg.chunk == 0 else s
+    nc = s // ck
+    xc = xh.reshape(b, nc, ck, h, hd)
+    bc = bmat.reshape(b, nc, ck, ds)
+    cc = cmat.reshape(b, nc, ck, ds)
+    lac = la.reshape(b, nc, ck, h)
+
+    cum = jnp.cumsum(lac, axis=2)                          # within-chunk
+    total = cum[:, :, -1, :]                               # (B, nc, H)
+
+    # intra-chunk: y_t = sum_{i<=t} exp(cum_t - cum_i) (C_t.B_i) x_i
+    li = cum[:, :, :, None, :] - cum[:, :, None, :, :]     # (B,nc,t,i,H)
+    mask = jnp.tril(jnp.ones((ck, ck), bool))
+    decay = jnp.where(mask[None, None, :, :, None], jnp.exp(li), 0.0)
+    scores = jnp.einsum("bnts,bnis->bnti", cc, bc)         # (B,nc,t,i)
+    y_intra = jnp.einsum("bnti,bntih,bnihd->bnthd", scores, decay, xc)
+
+    # chunk states: S_n = sum_i exp(total - cum_i) B_i^T x_i  (H, ds, hd)
+    dec_i = jnp.exp(total[:, :, None, :] - cum)            # (B,nc,ck,H)
+    s_chunk = jnp.einsum("bnis,bnih,bnihd->bnhsd", bc, dec_i, xc)
+
+    # inter-chunk scan over nc
+    def scan_fn(h_prev, inp):
+        s_c, tot = inp                                     # (B,H,ds,hd),(B,H)
+        h_new = h_prev * jnp.exp(tot)[:, :, None, None] + s_c
+        return h_new, h_prev
+
+    h0 = jnp.zeros((b, h, ds, hd), jnp.float32)
+    _, h_prevs = jax.lax.scan(
+        scan_fn, h0, (s_chunk.transpose(1, 0, 2, 3, 4),
+                      total.transpose(1, 0, 2)))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)             # (B,nc,H,ds,hd)
+
+    # inter-chunk contribution: y_t += exp(cum_t) C_t . h_prev
+    y_inter = jnp.einsum("bnts,bnth,bnhsd->bnthd", cc, jnp.exp(cum), h_prevs)
+
+    y = (y_intra + y_inter).reshape(b, s, h, hd)
+    y = y + params["d_skip"][None, None, :, None] * \
+        xin.reshape(b, s, h, hd).astype(jnp.float32)
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = shard(y, BATCH, None, MODEL)
+    return jnp.einsum("bse,ed->bsd", y, params["w_out"].astype(x.dtype))
+
+
+def ssm_decode(params, x: jax.Array, state: dict[str, jax.Array],
+               cfg: SSMConfig) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """Single-token recurrent step. x: (B, 1, D);
+    state: {"h": (B, H, ds, hd), "conv": (B, d_conv-1, di+2*ds)}."""
+    b = x.shape[0]
+    di, ds, h, hd = cfg.d_inner, cfg.d_state, cfg.n_heads, cfg.head_dim
+    z, xbc, dt = _split_proj(params, x, cfg)
+    window = jnp.concatenate([state["conv"], xbc], axis=1)  # (B, K, C)
+    w = params["conv_w"].astype(x.dtype)
+    conv_out = jnp.einsum("bkc,kc->bc", window, w) + \
+        params["conv_b"].astype(x.dtype)
+    xbc1 = jax.nn.silu(conv_out)[:, None, :]
+    xin, bmat, cmat = jnp.split(xbc1, [di, di + ds], axis=-1)
+
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["a_log"])
+    decay = jnp.exp(dt * a[None])                           # (B, H)
+    xh = xin[:, 0].reshape(b, h, hd).astype(jnp.float32) * dt[..., None]
+    bm = bmat[:, 0].astype(jnp.float32)                     # (B, ds)
+    cm = cmat[:, 0].astype(jnp.float32)
+    h_new = state["h"] * decay[:, :, None, None] + \
+        jnp.einsum("bs,bhd->bhsd", bm, xh)
+    y = jnp.einsum("bs,bhsd->bhd", cm, h_new)
+    y = y + params["d_skip"][None, :, None] * \
+        xin[:, 0].reshape(b, h, hd).astype(jnp.float32)
+    y = y.reshape(b, 1, di).astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, params["w_out"].astype(x.dtype))
+    return out, {"h": h_new, "conv": window[:, 1:]}
+
+
+def init_ssm_state(batch: int, cfg: SSMConfig, dtype=jnp.float32):
+    return {"h": jnp.zeros((batch, cfg.n_heads, cfg.d_state, cfg.head_dim),
+                           jnp.float32),
+            "conv": jnp.zeros((batch, cfg.d_conv - 1,
+                               cfg.d_inner + 2 * cfg.d_state), dtype)}

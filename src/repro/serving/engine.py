@@ -1,0 +1,103 @@
+"""Batched serving engine (wave-synchronous batching).
+
+Requests are processed in waves of ``slots``: each wave prefillls every
+slot's prompt through the decode path in lockstep (teacher forcing its own
+prompt token while it lasts, then switching to generation), so every slot
+advances every step — correct for attention caches AND recurrent
+(SSM/RWKV) states without per-slot state save/restore. Finished slots keep
+stepping but their outputs are discarded until the wave drains.
+
+One jit'd ``lm_decode_step`` serves the whole wave (the production decode
+hot path); greedy or temperature sampling per slot.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.lm import init_cache, lm_decode_step
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: list[int]
+    max_new_tokens: int = 16
+    output: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, params: Any, cfg: ArchConfig, *, slots: int = 8,
+                 max_seq: int = 512, temperature: float = 0.0, seed: int = 0,
+                 cache_dtype=jnp.float32):
+        self.params = params
+        self.cfg = cfg
+        self.slots = slots
+        self.max_seq = max_seq
+        self.temperature = temperature
+        self.queue: list[Request] = []
+        self.finished: list[Request] = []
+        self._rng = np.random.default_rng(seed)
+        self._decode = jax.jit(
+            lambda p, c, t, pos: lm_decode_step(p, c, t, pos, cfg))
+        self._cache_dtype = cache_dtype
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _sample(self, logits_row: np.ndarray) -> int:
+        if self.temperature == 0.0:
+            return int(np.argmax(logits_row))
+        z = logits_row / self.temperature
+        e = np.exp(z - z.max())
+        return int(self._rng.choice(len(z), p=e / e.sum()))
+
+    def run_wave(self) -> list[Request]:
+        """Serve the next ``slots`` queued requests to completion."""
+        wave = [self.queue.pop(0) for _ in range(min(self.slots,
+                                                     len(self.queue)))]
+        if not wave:
+            return []
+        cache = init_cache(self.cfg, self.slots, self.max_seq,
+                           self._cache_dtype)
+        pos = jnp.zeros((self.slots,), jnp.int32)
+        next_tok = np.zeros((self.slots, 1), np.int32)
+        for i, r in enumerate(wave):
+            next_tok[i, 0] = r.prompt[0]
+        total_steps = max(len(r.prompt) + r.max_new_tokens for r in wave) - 1
+
+        for t in range(min(total_steps, self.max_seq - 1)):
+            logits, cache = self._decode(self.params, cache,
+                                         jnp.asarray(next_tok), pos)
+            pos = pos + 1
+            lg = np.asarray(logits)
+            for i, r in enumerate(wave):
+                if t + 1 < len(r.prompt):            # still teacher-forcing
+                    next_tok[i, 0] = r.prompt[t + 1]
+                elif not r.done:                      # generating
+                    tok = self._sample(lg[i])
+                    r.output.append(tok)
+                    next_tok[i, 0] = tok
+                    if len(r.output) >= r.max_new_tokens:
+                        r.done = True
+                else:                                 # drained slot idles
+                    next_tok[i, 0] = 0
+            if all(r.done for r in wave):
+                break
+        for r in wave:
+            r.done = True
+        self.finished.extend(wave)
+        return wave
+
+    def run_to_completion(self, max_waves: int = 64) -> list[Request]:
+        for _ in range(max_waves):
+            if not self.queue:
+                break
+            self.run_wave()
+        return self.finished

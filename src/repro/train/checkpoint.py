@@ -1,0 +1,145 @@
+"""Fault-tolerant checkpointing with elastic restore.
+
+Format: one directory per step, one ``.npy`` per pytree leaf plus an
+``index.json`` with the tree structure and the *logical* sharding specs.
+Writes go to ``<dir>.tmp`` and are atomically renamed — a preempted save
+never corrupts the latest checkpoint. Saves can run asynchronously on a
+background thread; retention keeps the newest K steps.
+
+Elastic restore: leaves are stored as full (unsharded) logical arrays, so a
+checkpoint written on one mesh can be restored onto ANY mesh — the saved
+spec names are re-resolved against the new mesh (axes that no longer exist
+are dropped). MoE physical layouts (M, E_loc, D, F_loc) are relaid via
+``reshape_moe_layout`` when the model-axis size changes.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten_with_paths(tree: Any) -> list[tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        out.append((name, leaf))
+    return out
+
+
+def save_checkpoint(directory: str, step: int, tree: Any,
+                    specs: Any | None = None, keep: int = 3,
+                    async_save: bool = False) -> threading.Thread | None:
+    """Atomically persist ``tree`` under ``directory/step_<N>``."""
+    # Materialize on host BEFORE handing to the writer thread (the device
+    # buffers may be donated to the next step).
+    host_leaves = [(name, np.asarray(jax.device_get(leaf)))
+                   for name, leaf in _flatten_with_paths(tree)]
+    spec_map = {}
+    if specs is not None:
+        for name, spec in _flatten_with_paths(specs):
+            spec_map[name] = [list(ax) if isinstance(ax, tuple) else ax
+                              for ax in (spec or [])]
+
+    def write():
+        final = os.path.join(directory, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        os.makedirs(tmp, exist_ok=True)
+        index = {"step": step, "leaves": {}, "specs": spec_map}
+        for name, arr in host_leaves:
+            fname = name.replace("/", "__") + ".npy"
+            np.save(os.path.join(tmp, fname), arr)
+            index["leaves"][name] = {"file": fname,
+                                     "shape": list(arr.shape),
+                                     "dtype": str(arr.dtype)}
+        with open(os.path.join(tmp, "index.json"), "w") as f:
+            json.dump(index, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)                        # atomic publish
+        _apply_retention(directory, keep)
+
+    if async_save:
+        t = threading.Thread(target=write, daemon=True)
+        t.start()
+        return t
+    write()
+    return None
+
+
+def _apply_retention(directory: str, keep: int) -> None:
+    steps = sorted(d for d in os.listdir(directory)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, step: int, like: Any,
+                       mesh=None, specs: Any | None = None) -> Any:
+    """Restore into the structure of ``like``. If ``mesh``+``specs`` are
+    given, leaves are placed with the corresponding NamedSharding resolved
+    against the (possibly different — elastic) mesh."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "index.json")) as f:
+        index = json.load(f)
+
+    names = [name for name, _ in _flatten_with_paths(like)]
+    spec_leaves = [s for _, s in _flatten_with_paths(specs)] \
+        if specs is not None else [None] * len(names)
+    loaded = []
+    axis_names = set(mesh.axis_names) if mesh is not None else set()
+    for name, spec in zip(names, spec_leaves):
+        arr = np.load(os.path.join(path, index["leaves"][name]["file"]))
+        if mesh is not None and spec is not None:
+            def keep_ax(ax):
+                if isinstance(ax, tuple):
+                    kept = tuple(a for a in ax if a in axis_names)
+                    return kept or None
+                return ax if (ax is None or ax in axis_names) else None
+            resolved = P(*(keep_ax(ax) for ax in spec))
+            loaded.append(jax.device_put(arr, NamedSharding(mesh, resolved)))
+        else:
+            loaded.append(jnp.asarray(arr))
+    tdef = jax.tree_util.tree_structure(like)
+    return jax.tree_util.tree_unflatten(tdef, loaded)
+
+
+def reshape_moe_layout(w: np.ndarray, old_m: int, new_m: int,
+                       num_experts: int) -> np.ndarray:
+    """Relay an MoE physical layout (M, E_loc, D, F_loc) between meshes with
+    different model-axis sizes (elastic rescale)."""
+    m, el, d, fl = w.shape
+    assert m == old_m
+    tp_old = max(1, old_m // num_experts)
+    # back to logical (E, D, F)
+    if num_experts >= old_m:
+        logical = w.reshape(old_m * el, d, fl)
+    else:
+        logical = w.reshape(num_experts, tp_old, d, fl).transpose(0, 2, 1, 3) \
+            .reshape(num_experts, d, tp_old * fl)
+    # to the new physical layout
+    tp_new = max(1, new_m // num_experts)
+    el_new = max(1, num_experts // new_m)
+    f = logical.shape[-1]
+    if num_experts >= new_m:
+        return logical.reshape(new_m, el_new, d, f)
+    return logical.reshape(num_experts, d, tp_new, f // tp_new) \
+        .transpose(0, 2, 1, 3).reshape(new_m, 1, d, f // tp_new)

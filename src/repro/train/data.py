@@ -1,0 +1,71 @@
+"""Synthetic data pipeline: deterministic, host-shardable, learnable.
+
+The stream is a Markov-bigram language: a fixed (vocab, vocab) transition
+table drawn from the dataset seed generates sequences whose next-token
+distribution is low-entropy — a ~100M-param model visibly learns it within
+a few hundred steps (used by examples/train_*.py and the integration tests).
+
+Batches are produced per-host (each host generates only its shard of the
+global batch, keyed by (seed, step, host_index)) and placed onto the mesh
+with the global batch sharding — the standard multi-host input pattern.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 1234
+    branching: int = 4          # candidate next-tokens per token
+
+
+class SyntheticLM:
+    """Deterministic bigram-process token stream."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        rng = np.random.default_rng(cfg.seed)
+        self.table = rng.integers(
+            0, cfg.vocab_size,
+            size=(cfg.vocab_size, cfg.branching)).astype(np.int32)
+
+    def batch(self, step: int, host_index: int = 0,
+              host_count: int = 1) -> dict[str, np.ndarray]:
+        cfg = self.cfg
+        local = cfg.global_batch // host_count
+        rng = np.random.default_rng(
+            (cfg.seed, step, host_index))
+        toks = np.empty((local, cfg.seq_len + 1), np.int32)
+        toks[:, 0] = rng.integers(0, cfg.vocab_size, size=local)
+        choices = rng.integers(0, cfg.branching,
+                               size=(local, cfg.seq_len))
+        for t in range(cfg.seq_len):
+            toks[:, t + 1] = self.table[toks[:, t], choices[:, t]]
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+    def iterator(self, start_step: int = 0, host_index: int = 0,
+                 host_count: int = 1) -> Iterator[dict[str, np.ndarray]]:
+        step = start_step
+        while True:
+            yield self.batch(step, host_index, host_count)
+            step += 1
+
+
+def place_batch(batch: dict[str, np.ndarray], mesh=None):
+    """Put a host-local batch onto the mesh with global-batch sharding."""
+    if mesh is None:
+        return {k: jnp.asarray(v) for k, v in batch.items()}
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    sharding = NamedSharding(mesh, P(batch_axes or None))
+    return {k: jax.device_put(jnp.asarray(v), sharding)
+            for k, v in batch.items()}

@@ -1,0 +1,125 @@
+"""Fault-tolerance machinery for 1000+ node runs.
+
+* StragglerMonitor — per-step wall-time tracking; steps slower than
+  ``threshold x`` the trailing median flag the host as a straggler and fire
+  a callback (eviction request / rescheduling in a real deployment).
+* PreemptionGuard — converts SIGTERM into a "checkpoint now" flag the train
+  loop polls between steps (the standard TPU-preemption pattern).
+* ElasticPlan — given a failed/resized device set, computes the new mesh
+  shape (dropping whole pods first, then data rows) and drives
+  checkpoint-based resharding via ``restore_checkpoint`` on the new mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import statistics
+import time
+from typing import Callable
+
+
+class StragglerMonitor:
+    def __init__(self, window: int = 32, threshold: float = 2.0,
+                 on_straggler: Callable[[float, float], None] | None = None):
+        self.window = window
+        self.threshold = threshold
+        self.on_straggler = on_straggler
+        self.durations: list[float] = []
+        self.flagged: list[int] = []
+        self._t0: float | None = None
+        self._step = 0
+
+    def step_start(self) -> None:
+        self._t0 = time.monotonic()
+
+    def step_end(self) -> bool:
+        """Record a step; returns True when the step is a straggler."""
+        assert self._t0 is not None
+        dt = time.monotonic() - self._t0
+        self._t0 = None
+        self._step += 1
+        hist = self.durations[-self.window:]
+        self.durations.append(dt)
+        if len(hist) >= 8:
+            med = statistics.median(hist)
+            if dt > self.threshold * med:
+                self.flagged.append(self._step)
+                if self.on_straggler:
+                    self.on_straggler(dt, med)
+                return True
+        return False
+
+    @property
+    def median(self) -> float:
+        return statistics.median(self.durations) if self.durations else 0.0
+
+
+class PreemptionGuard:
+    """SIGTERM -> graceful 'save and exit' flag."""
+
+    def __init__(self, signals=(signal.SIGTERM,)):
+        self.requested = False
+        self._signals = signals
+
+    def install(self) -> "PreemptionGuard":
+        for s in self._signals:
+            signal.signal(s, self._handler)
+        return self
+
+    def _handler(self, signum, frame):
+        self.requested = True
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    """Mesh-resize decision after a failure or a capacity change."""
+
+    old_shape: tuple[int, ...]
+    new_shape: tuple[int, ...]
+    axis_names: tuple[str, ...]
+
+    @staticmethod
+    def after_failure(shape: tuple[int, ...], axis_names: tuple[str, ...],
+                      healthy_devices: int) -> "ElasticPlan":
+        """Shrink the mesh to fit the surviving devices: drop whole pods
+        first, then halve the data axis (model parallelism is preserved —
+        it is baked into weight layouts)."""
+        new = list(shape)
+        names = list(axis_names)
+
+        def total(s):
+            t = 1
+            for v in s:
+                t *= v
+            return t
+
+        # drop pods one by one
+        while total(new) > healthy_devices and "pod" in names:
+            i = names.index("pod")
+            if new[i] > 1:
+                new[i] -= 1
+            else:
+                names.pop(i)
+                new.pop(i)
+        # then halve data
+        while total(new) > healthy_devices:
+            i = names.index("data")
+            if new[i] <= 1:
+                raise RuntimeError(
+                    f"cannot shrink below model parallelism: {new}")
+            new[i] //= 2
+        return ElasticPlan(shape, tuple(new), tuple(names))
+
+    @property
+    def batch_scale(self) -> float:
+        """Keep per-device batch constant: global batch scales with the
+        data-like axes."""
+        def data_size(shape, names):
+            t = 1
+            for v, n in zip(shape, names):
+                if n in ("pod", "data"):
+                    t *= v
+            return t
+        old = data_size(self.old_shape, self.axis_names)
+        new = data_size(self.new_shape, self.axis_names)
+        return new / old

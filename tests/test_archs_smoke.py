@@ -1,0 +1,123 @@
+"""Per-architecture smoke tests: every assigned arch in REDUCED form runs a
+forward + train step on CPU, asserts output shapes and no NaNs, and (where
+the family supports it) a decode step against a fresh cache."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ASSIGNED, get_config, reduced
+from repro.models.common import split_tree
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _params(cfg):
+    if cfg.family == "audio":
+        from repro.models.encdec import init_encdec
+        return split_tree(init_encdec(KEY, cfg))[0]
+    from repro.models.lm import init_lm
+    return split_tree(init_lm(KEY, cfg))[0]
+
+
+def _batch(cfg, b=2, s=16):
+    batch = {"tokens": jax.random.randint(KEY, (b, s), 0, cfg.vocab_size),
+             "labels": jax.random.randint(KEY, (b, s), 0, cfg.vocab_size)}
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(KEY, (b, cfg.encoder_seq,
+                                                  cfg.d_model))
+    if cfg.vlm_stub:
+        batch["patch_embeds"] = jax.random.normal(KEY, (b, s, cfg.d_model))
+        batch["patch_mask"] = jnp.zeros((b, s), bool).at[:, :4].set(True)
+    return batch
+
+
+@pytest.mark.parametrize("name", ASSIGNED)
+def test_forward_and_train_step(name):
+    cfg = reduced(get_config(name))
+    params = _params(cfg)
+    batch = _batch(cfg)
+    if cfg.family == "audio":
+        from repro.models.encdec import encdec_loss as loss_fn
+    else:
+        from repro.models.lm import lm_loss as loss_fn
+    (loss, metrics), grads = jax.value_and_grad(
+        loss_fn, has_aux=True)(params, batch, cfg)
+    assert np.isfinite(float(loss))
+    leaves = jax.tree.leaves(grads)
+    assert all(not bool(jnp.isnan(g).any()) for g in leaves)
+    assert float(loss) == pytest.approx(np.log(cfg.vocab_size), rel=0.2)
+
+
+@pytest.mark.parametrize("name", ASSIGNED)
+def test_decode_step(name):
+    cfg = reduced(get_config(name))
+    params = _params(cfg)
+    b = 2
+    if cfg.family == "audio":
+        from repro.models.encdec import (encdec_decode_step,
+                                         init_encdec_cache)
+        frames = jax.random.normal(KEY, (b, cfg.encoder_seq, cfg.d_model))
+        cache = init_encdec_cache(params, frames, cfg, b, 32,
+                                  dtype=jnp.float32)
+        step = lambda c, t, p: encdec_decode_step(params, c, t, p, cfg)  # noqa
+    else:
+        from repro.models.lm import init_cache, lm_decode_step
+        cache = init_cache(cfg, b, 32, dtype=jnp.float32)
+        step = lambda c, t, p: lm_decode_step(params, c, t, p, cfg)  # noqa
+    toks = jax.random.randint(KEY, (b, 1), 0, cfg.vocab_size)
+    logits, cache = step(cache, toks, jnp.zeros((b,), jnp.int32))
+    assert logits.shape == (b, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits).any())
+    logits2, _ = step(cache, toks, jnp.ones((b,), jnp.int32))
+    assert not bool(jnp.isnan(logits2).any())
+
+
+@pytest.mark.parametrize("name", ["qwen3-0.6b", "rwkv6-7b", "zamba2-2.7b",
+                                  "mixtral-8x7b", "whisper-large-v3"])
+def test_decode_matches_forward(name):
+    """Teacher-forced decode == training forward, position by position."""
+    cfg = reduced(get_config(name))
+    params = _params(cfg)
+    b, s = 2, 8
+    toks = jax.random.randint(KEY, (b, s), 0, cfg.vocab_size)
+
+    if cfg.family == "audio":
+        from repro.models.encdec import (decode_train, encode,
+                                         encdec_decode_step,
+                                         init_encdec_cache)
+        from repro.models.common import unembed
+        frames = jax.random.normal(KEY, (b, cfg.encoder_seq, cfg.d_model))
+        enc = encode(params, frames, cfg)
+        hidden = decode_train(params, toks, enc, cfg)
+        full = unembed(params["embed"], hidden)
+        cache = init_encdec_cache(params, frames, cfg, b, s,
+                                  dtype=jnp.float32)
+        step = lambda c, t, p: encdec_decode_step(params, c, t, p, cfg)  # noqa
+    else:
+        from repro.models.lm import (init_cache, lm_decode_step, lm_forward)
+        from repro.models.common import unembed
+        hidden, _ = lm_forward(params, {"tokens": toks}, cfg)
+        full = unembed(params["embed"], hidden)
+        cache = init_cache(cfg, b, s, dtype=jnp.float32)
+        step = lambda c, t, p: lm_decode_step(params, c, t, p, cfg)  # noqa
+
+    for t in range(s):
+        logits, cache = step(cache, toks[:, t:t + 1],
+                             jnp.full((b,), t, jnp.int32))
+        np.testing.assert_allclose(np.asarray(logits),
+                                   np.asarray(full[:, t]),
+                                   rtol=2e-2, atol=2e-2)
+
+
+def test_param_count_sanity_full_configs():
+    """Full (non-reduced) configs expose the expected parameter scale."""
+    expectations = {  # rough public numbers, +-35%
+        "rwkv6-7b": 7.6e9, "qwen1.5-4b": 4e9, "deepseek-7b": 7e9,
+        "qwen3-0.6b": 0.6e9, "qwen3-14b": 14e9, "zamba2-2.7b": 2.7e9,
+        "mixtral-8x7b": 47e9, "deepseek-v2-236b": 236e9,
+        "whisper-large-v3": 1.5e9, "pixtral-12b": 12e9,
+    }
+    for name, want in expectations.items():
+        got = get_config(name).param_count()
+        assert 0.6 * want < got < 1.6 * want, (name, got, want)

@@ -1,0 +1,95 @@
+"""Attention-path equivalences: flash == standard, scatter == one-hot cache,
+SWA masks, MLA flash == naive MLA."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import (AttnConfig, attention, attention_decode,
+                                    flash_attention, init_attention,
+                                    init_kv_cache)
+from repro.models.common import split_tree
+from repro.models.mla import (MLAConfig, init_mla, mla_attention,
+                              mla_flash_attention)
+
+KEY = jax.random.PRNGKey(0)
+CFG = AttnConfig(d_model=64, n_heads=4, n_kv_heads=2, d_head=16)
+
+
+def _params(cfg=CFG):
+    return split_tree(init_attention(KEY, cfg))[0]
+
+
+@pytest.mark.parametrize("kv_chunk", [4, 8, 16])
+def test_flash_equals_standard(kv_chunk):
+    p = _params()
+    x = jax.random.normal(KEY, (2, 32, 64))
+    a = attention(p, x, CFG)
+    b = flash_attention(p, x, CFG, kv_chunk=kv_chunk)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=7e-5,
+                               rtol=7e-5)
+
+
+def test_flash_equals_standard_with_swa():
+    cfg = dataclasses.replace(CFG, sliding_window=8)
+    p = _params(cfg)
+    x = jax.random.normal(KEY, (2, 32, 64))
+    np.testing.assert_allclose(
+        np.asarray(attention(p, x, cfg)),
+        np.asarray(flash_attention(p, x, cfg, kv_chunk=8)),
+        atol=7e-5, rtol=7e-5)
+
+
+def test_sliding_window_masks_far_tokens():
+    """With window w, logits for keys beyond w positions back are masked:
+    outputs at position t must be independent of tokens <= t - w."""
+    cfg = dataclasses.replace(CFG, sliding_window=4)
+    p = _params(cfg)
+    x = jax.random.normal(KEY, (1, 16, 64))
+    y1 = attention(p, x, cfg)
+    x2 = x.at[0, 0].set(99.0)               # perturb a far-away token
+    y2 = attention(p, x2, cfg)
+    np.testing.assert_allclose(np.asarray(y1[0, 8:]), np.asarray(y2[0, 8:]),
+                               atol=1e-5)
+
+
+def test_scatter_cache_equals_onehot():
+    cfg_1h = dataclasses.replace(CFG, scatter_cache=False)
+    cfg_sc = dataclasses.replace(CFG, scatter_cache=True)
+    p = _params()
+    c1 = init_kv_cache(2, CFG, 16, jnp.float32)
+    c2 = init_kv_cache(2, CFG, 16, jnp.float32)
+    for t in range(5):
+        x = jax.random.normal(jax.random.PRNGKey(t), (2, 1, 64))
+        pos = jnp.full((2,), t, jnp.int32)
+        o1, c1 = attention_decode(p, x, c1, pos, cfg_1h)
+        o2, c2 = attention_decode(p, x, c2, pos, cfg_sc)
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(c1["k"]), np.asarray(c2["k"]),
+                                   atol=1e-6)
+
+
+def test_swa_ring_buffer_wraps():
+    """Ring cache of size w: decoding past w keeps only the last w keys."""
+    cfg = dataclasses.replace(CFG, sliding_window=4)
+    p = _params(cfg)
+    cache = init_kv_cache(1, cfg, 64, jnp.float32)
+    assert cache["k"].shape[1] == 4              # ring buffer = window
+    toks = jax.random.normal(KEY, (10, 1, 1, 64))
+    for t in range(10):
+        out, cache = attention_decode(p, toks[t], cache,
+                                      jnp.asarray([t]), cfg)
+    assert not bool(jnp.isnan(out).any())
+
+
+def test_mla_flash_equals_naive():
+    cfg = MLAConfig(d_model=64, n_heads=4, q_lora=32, kv_lora=16, qk_nope=16,
+                    qk_rope=8, v_head=16)
+    p = split_tree(init_mla(KEY, cfg))[0]
+    x = jax.random.normal(KEY, (2, 32, 64))
+    np.testing.assert_allclose(
+        np.asarray(mla_attention(p, x, cfg)),
+        np.asarray(mla_flash_attention(p, x, cfg, kv_chunk=8)),
+        atol=3e-5, rtol=3e-5)

@@ -1,0 +1,108 @@
+"""Dry-run/launch machinery: HLO collective parser, spec sanitizing, FSDP
+policy, model-flops accounting. (Pure-python; no 512-device flag needed.)"""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.dryrun import collective_bytes, model_flops
+from repro.launch.mesh import apply_fsdp, sanitize_specs
+
+
+def make_meta_mesh(data: int, model: int):
+    """Metadata-only mesh (no devices needed) for spec-transform tests."""
+    return jax.sharding.AbstractMesh((data, model), ("data", "model"))
+from repro.launch.specs import SHAPES
+
+
+HLO = """
+ENTRY %main {
+  %p0 = f32[128,256]{1,0} parameter(0)
+  %all-gather.1 = f32[512,256]{1,0} all-gather(%p0), replica_groups={}
+  %ar = bf16[1024]{0} all-reduce(%x), to_apply=%add
+  %rs.2 = f32[64,256]{1,0} reduce-scatter(%all-gather.1), dimensions={0}
+  %cp = u8[1000]{0} collective-permute(%y)
+  %a2a = bf16[16,32]{1,0} all-to-all(%z), dimensions={0}
+  %not-a-collective = f32[9]{0} add(%p0, %p0)
+}
+"""
+
+
+def test_collective_parser_kinds_and_bytes():
+    out = collective_bytes(HLO)
+    assert out["all-gather"] == 512 * 256 * 4
+    assert out["all-reduce"] == 1024 * 2
+    assert out["reduce-scatter"] == 64 * 256 * 4
+    assert out["collective-permute"] == 1000
+    assert out["all-to-all"] == 16 * 32 * 2
+    assert set(out) == {"all-gather", "all-reduce", "reduce-scatter",
+                        "collective-permute", "all-to-all"}
+
+
+def test_collective_parser_ignores_plain_ops():
+    assert collective_bytes("%x = f32[8]{0} add(%a, %b)") == {}
+
+
+def test_sanitize_drops_nondivisible_and_missing_axes():
+    mesh = make_meta_mesh(2, 4)
+    specs = {"a": P("model", None), "b": P("pod", "data"), "c": P("model"),
+             "d": P("model", None)}
+    shapes = {"a": jax.ShapeDtypeStruct((6, 8), jnp.float32),   # 6 % 4 != 0
+              "b": jax.ShapeDtypeStruct((4, 4), jnp.float32),
+              "c": jax.ShapeDtypeStruct((8,), jnp.float32),
+              "d": jax.ShapeDtypeStruct((6, 7), jnp.float32)}   # nowhere fits
+    out = sanitize_specs(specs, shapes, mesh)
+    # non-divisible dim -> axis RELOCATES to the free divisible dim
+    assert out["a"] == P(None, "model")
+    assert out["b"] == P(None, "data")        # pod absent -> dropped
+    assert out["c"] == P("model")             # 8 % 4 == 0 -> kept
+    assert out["d"] == P(None, None)          # no divisible home -> dropped
+
+
+def test_apply_fsdp_targets_largest_free_dim():
+    mesh = make_meta_mesh(4, 2)
+    specs = {"w": P(None, "model"), "tiny": P(None)}
+    shapes = {"w": jax.ShapeDtypeStruct((4096, 512), jnp.float32),
+              "tiny": jax.ShapeDtypeStruct((64,), jnp.float32)}
+    out = apply_fsdp(specs, shapes, mesh, min_elems=1 << 10)
+    assert out["w"] == P("data", "model")
+    assert out["tiny"] == P(None)             # below min_elems
+
+
+def test_apply_fsdp_skips_already_data_sharded():
+    mesh = make_meta_mesh(4, 2)
+    specs = {"w": P("data", "model")}
+    shapes = {"w": jax.ShapeDtypeStruct((4096, 512), jnp.float32)}
+    assert apply_fsdp(specs, shapes, mesh, min_elems=1)["w"] == \
+        P("data", "model")
+
+
+def test_model_flops_train_vs_decode():
+    from repro.configs.registry import get_config
+    cfg = get_config("qwen3-0.6b")
+    train = model_flops(cfg, "train_4k")
+    decode = model_flops(cfg, "decode_32k")
+    n = cfg.param_count()
+    sh = SHAPES["train_4k"]
+    assert train == pytest.approx(6 * n * sh.batch * sh.seq, rel=1e-6)
+    assert decode == pytest.approx(2 * n * SHAPES["decode_32k"].batch,
+                                   rel=1e-6)
+
+
+def test_model_flops_moe_counts_active_only():
+    from repro.configs.registry import get_config
+    moe = get_config("mixtral-8x7b")
+    dense_equiv = moe.param_count()
+    active = model_flops(moe, "train_4k") / (6 * SHAPES["train_4k"].batch
+                                             * SHAPES["train_4k"].seq)
+    assert active < 0.45 * dense_equiv        # top-2 of 8 experts
+
+
+def test_shapes_table_matches_assignment():
+    assert SHAPES["train_4k"].seq == 4096
+    assert SHAPES["train_4k"].batch == 256
+    assert SHAPES["prefill_32k"].seq == 32768 and \
+        SHAPES["prefill_32k"].batch == 32
+    assert SHAPES["decode_32k"].batch == 128
+    assert SHAPES["long_500k"].seq == 524288 and \
+        SHAPES["long_500k"].batch == 1

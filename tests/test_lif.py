@@ -1,0 +1,81 @@
+"""LIF neuron + BPTT correctness (paper eq. 1-3, 11-12)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.lif import (LIFConfig, lif_reference_manual_grad, lif_scan,
+                            lif_scan_with_state, lif_step)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_spikes_are_binary():
+    x = jax.random.normal(KEY, (6, 32, 16)) * 3
+    s = lif_scan(x, LIFConfig())
+    assert set(np.unique(np.asarray(s))) <= {0.0, 1.0}
+
+
+def test_fire_threshold_semantics():
+    cfg = LIFConfig(alpha=0.5, th_fire=1.0)
+    u, s = lif_step(jnp.zeros(4), jnp.zeros(4),
+                    jnp.array([0.5, 0.99, 1.0, 2.0]), cfg)
+    assert np.array_equal(np.asarray(s), [0, 0, 1, 1])
+
+
+def test_hard_reset():
+    """After a spike the membrane restarts from 0 (eq. 11 reset term)."""
+    cfg = LIFConfig(alpha=0.5, th_fire=1.0)
+    x = jnp.array([[2.0], [0.0], [0.0]])          # spike at t=0, then decay
+    s = lif_scan(x, cfg)
+    assert np.asarray(s)[0, 0] == 1
+    # u1 = alpha * u0 * (1 - s0) + 0 = 0 -> no spike forever after
+    assert np.asarray(s)[1:].sum() == 0
+
+
+def test_leak_accumulation():
+    cfg = LIFConfig(alpha=0.5, th_fire=1.0)
+    x = jnp.full((3, 1), 0.6)
+    s = np.asarray(lif_scan(x, cfg))
+    # u0=0.6 (no), u1=0.9 (no), u2=1.05 (spike)
+    assert s.tolist() == [[0.0], [0.0], [1.0]]
+
+
+@pytest.mark.parametrize("alpha", [0.3, 0.5, 0.9])
+@pytest.mark.parametrize("t", [1, 4, 9])
+def test_bptt_matches_eq12(alpha, t):
+    cfg = LIFConfig(alpha=alpha)
+    x = jax.random.normal(jax.random.PRNGKey(t), (t, 33)) * 2
+    g = jax.random.normal(jax.random.PRNGKey(t + 1), (t, 33))
+    auto = jax.vjp(lambda xs: lif_scan(xs, cfg), x)[1](g)[0]
+    manual = lif_reference_manual_grad(x, g, cfg)
+    assert jnp.allclose(auto, manual, atol=1e-5)
+
+
+def test_streaming_state_continuity():
+    cfg = LIFConfig()
+    x = jax.random.normal(KEY, (8, 17)) * 2
+    full = lif_scan(x, cfg)
+    s1, carry = lif_scan_with_state(x[:4], jnp.zeros(17), jnp.zeros(17), cfg)
+    s2, _ = lif_scan_with_state(x[4:], *carry, cfg)
+    assert jnp.allclose(jnp.concatenate([s1, s2]), full)
+
+
+@settings(max_examples=30, deadline=None)
+@given(alpha=st.floats(0.05, 0.95), scale=st.floats(0.1, 5.0),
+       seed=st.integers(0, 2 ** 16))
+def test_membrane_bounded_property(alpha, scale, seed):
+    """Invariant: with hard reset, |U| can never exceed
+    max|x| / (1 - alpha) between spikes."""
+    cfg = LIFConfig(alpha=alpha)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (12, 8)) * scale
+
+    def step(carry, xt):
+        u, s = carry
+        u2, s2 = lif_step(u, s, xt, cfg)
+        return (u2, s2), u2
+
+    (_, _), us = jax.lax.scan(step, (jnp.zeros(8), jnp.zeros(8)), x)
+    bound = jnp.max(jnp.abs(x)) / (1 - alpha) + 1e-4
+    assert float(jnp.max(jnp.abs(us))) <= float(bound)
