@@ -20,29 +20,41 @@ def _time(fn, *args, reps=3) -> float:
     return (time.perf_counter() - t0) / reps * 1e6
 
 
-def run() -> list[str]:
+def run(smoke: bool = False) -> list[str]:
     key = jax.random.PRNGKey(0)
     lines = ["name,us_per_call,derived"]
+    m, c, k = (128, 512, 128) if smoke else (512, 2048, 512)
+    reps = 1 if smoke else 3
 
-    x = jax.random.normal(key, (4, 512, 512))
-    us = _time(lambda a: ops.lif_soma_op(a), x)
-    ref_us = _time(lambda a: ref.lif_soma_fwd_ref(a)[0], x)
+    x = jax.random.normal(key, (4, m, k))
+    us = _time(lambda a: ops.lif_soma_op(a), x, reps=reps)
+    ref_us = _time(lambda a: ref.lif_soma_fwd_ref(a)[0], x, reps=reps)
     lines.append(f"lif_soma_pallas_interp,{us:.0f},ref_jnp={ref_us:.0f}us")
 
-    sp = (jax.random.uniform(key, (512, 2048)) < 0.2).astype(jnp.float32)
-    w = jax.random.normal(key, (2048, 512), jnp.float32)
+    # The dispatching model API (lif_scan) on both backends — this is the
+    # path the Spikingformer hot loop actually takes.
+    from repro.core.lif import LIFConfig, lif_scan
+    us_j = _time(lambda a: lif_scan(a, LIFConfig()), x, reps=reps)
+    us_p = _time(lambda a: lif_scan(a, LIFConfig(backend="pallas")), x,
+                 reps=reps)
+    lines.append(f"lif_scan_backend_ab,{us_p:.0f},jnp={us_j:.0f}us")
+
+    sp = (jax.random.uniform(key, (m, c)) < 0.2).astype(jnp.float32)
+    w = jax.random.normal(key, (c, k), jnp.float32)
     packed = spike_pack(sp)
-    us = _time(lambda p, ww: ops.spike_matmul_packed_op(p, ww), packed, w)
-    ref_us = _time(lambda s, ww: ref.spike_matmul_ref(s, ww), sp, w)
+    us = _time(lambda p, ww: ops.spike_matmul_packed_op(p, ww), packed, w,
+               reps=reps)
+    ref_us = _time(lambda s, ww: ref.spike_matmul_ref(s, ww), sp, w,
+                   reps=reps)
     ratio = sp.astype(jnp.bfloat16).nbytes / packed.nbytes
     lines.append(f"spike_matmul_packed,{us:.0f},ref={ref_us:.0f}us;"
                  f"hbm_input_bytes_saved={ratio:.0f}x")
 
-    xb = jax.random.normal(key, (2048, 512))
-    g = jnp.ones((512,))
-    b = jnp.zeros((512,))
-    us = _time(lambda a: ops.bn_train_op(a, g, b), xb)
-    ref_us = _time(lambda a: ref.bn_fwd_ref(a, g, b)[0], xb)
+    xb = jax.random.normal(key, (c, k))
+    g = jnp.ones((k,))
+    b = jnp.zeros((k,))
+    us = _time(lambda a: ops.bn_train_op(a, g, b)[0], xb, reps=reps)
+    ref_us = _time(lambda a: ref.bn_fwd_ref(a, g, b)[0], xb, reps=reps)
     lines.append(f"fused_bn_fwd,{us:.0f},ref={ref_us:.0f}us")
     return lines
 

@@ -35,11 +35,57 @@ def rows() -> list[dict]:
     return out
 
 
-def run() -> list[str]:
+def backend_ab_rows(reps: int = 2) -> list[str]:
+    """Model-level jnp-vs-pallas A/B on the smoke Spikingformer: one BPTT
+    step (loss + grads) per backend, wall time and gradient parity vs jnp.
+
+    On CPU the pallas column runs the kernels in interpret mode, so the
+    number demonstrates *correct wiring*, not speed; on TPU the same code
+    lowers to Mosaic and the column becomes the actual fused-kernel time.
+    """
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.spikingformer import get_spikingformer_config
+    from repro.core.spikingformer import init_spikingformer, spikingformer_loss
+
+    cfg = get_spikingformer_config("spikingformer-smoke")
+    params, state = init_spikingformer(jax.random.PRNGKey(0), cfg)
+    imgs = jax.random.uniform(jax.random.PRNGKey(1), (2, 32, 32, 3))
+    labels = jnp.arange(2) % cfg.num_classes
+
+    lines = ["backend,loss,step_ms,max_grad_diff_vs_jnp"]
+    grad_fn = jax.jit(jax.value_and_grad(spikingformer_loss, has_aux=True),
+                      static_argnums=4)
+    base_grads = None
+    for backend, spike_mm in (("jnp", False), ("pallas", False),
+                              ("pallas", True)):
+        c = cfg.with_backend(backend, spike_mm=spike_mm)
+        (loss, _), grads = grad_fn(params, state, imgs, labels, c)  # compile
+        jax.block_until_ready(grads)
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            jax.block_until_ready(grad_fn(params, state, imgs, labels, c)[1])
+        ms = (time.perf_counter() - t0) / reps * 1e3
+        if base_grads is None:
+            base_grads, diff = grads, 0.0
+        else:
+            diff = max(float(jnp.max(jnp.abs(a - b))) for a, b in
+                       zip(jax.tree.leaves(base_grads), jax.tree.leaves(grads)))
+        name = backend + ("+spike_mm" if spike_mm else "")
+        lines.append(f"{name},{float(loss):.6f},{ms:.1f},{diff:.2e}")
+    return lines
+
+
+def run(smoke: bool = False) -> list[str]:
     lines = ["model,ops_g,energy_mj_ours,energy_mj_paper"]
     for r in rows():
         lines.append(f"{r['model']},{r['ops_g']},{r['energy_mj_ours']},"
                      f"{r['energy_mj_paper']}")
+    lines.append("")
+    lines += backend_ab_rows(reps=1 if smoke else 2)
     return lines
 
 

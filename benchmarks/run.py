@@ -1,27 +1,44 @@
 """Benchmark entry point — one section per paper table/figure.
 
 Prints ``name,value,...`` CSV blocks:
-  table1   - model OPs/energy comparison            (Table I)
-  fig9_10  - nine-dataflow energy+latency sweep     (Fig. 9 / Fig. 10)
-  fig11    - OS_C per-operator energy breakdown     (Fig. 11)
-  table9   - headline metrics vs paper + SOTA       (Table IX)
-  kernels  - Pallas kernel micro-benches            (interpret mode)
+  table1   - model OPs/energy comparison + backend A/B   (Table I)
+  fig9_10  - nine-dataflow energy+latency sweep          (Fig. 9 / Fig. 10)
+  fig11    - OS_C per-operator energy breakdown          (Fig. 11)
+  table9   - headline metrics vs paper + SOTA            (Table IX)
+  kernels  - Pallas kernel micro-benches                 (interpret mode)
+
+``--smoke`` (used by CI) shrinks the kernel shapes and rep counts so the
+whole sweep finishes in well under a minute on a laptop-class CPU.
 """
 from __future__ import annotations
 
+import argparse
+import sys
 import time
+from pathlib import Path
+
+# Allow both `python -m benchmarks.run` and `python benchmarks/run.py`.
+_ROOT = Path(__file__).resolve().parent.parent
+for p in (str(_ROOT), str(_ROOT / "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized shapes/reps; still exercises every section")
+    args = ap.parse_args()
+
     from benchmarks import (bench_comparison, bench_dataflows,
                             bench_energy_breakdown, bench_kernels,
                             bench_model_table)
     sections = [
-        ("table1", bench_model_table.run),
+        ("table1", lambda: bench_model_table.run(smoke=args.smoke)),
         ("fig9_10", bench_dataflows.run),
         ("fig11", bench_energy_breakdown.run),
         ("table9", bench_comparison.run),
-        ("kernels", bench_kernels.run),
+        ("kernels", lambda: bench_kernels.run(smoke=args.smoke)),
     ]
     for name, fn in sections:
         t0 = time.perf_counter()

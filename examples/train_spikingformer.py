@@ -14,11 +14,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.spikingformer import (SpikingFormerConfig, init_spikingformer,
-                                      spikingformer_grad_step)
+from repro.configs.spikingformer import get_spikingformer_config
+from repro.core.backend import BACKENDS, default_backend
+from repro.core.spikingformer import init_spikingformer
 from repro.train.checkpoint import save_checkpoint
-from repro.train.optimizer import (OptimizerConfig, adamw_update,
-                                   init_opt_state)
+from repro.train.loop import make_spikingformer_train_step
+from repro.train.optimizer import OptimizerConfig, init_opt_state
 from repro.train.resilience import StragglerMonitor
 
 
@@ -39,30 +40,37 @@ def main() -> None:
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--batch", type=int, default=16)
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--backend", choices=BACKENDS, default=default_backend(),
+                    help="kernel backend: jnp (lax.scan) or pallas (fused "
+                         "SOMA/GRAD + BN kernels; interpret mode off-TPU)")
+    ap.add_argument("--spike-mm", action="store_true",
+                    help="route Conv1DBN matmuls through the bit-packed "
+                         "spike kernel (pallas backend only)")
     args = ap.parse_args()
 
-    cfg = SpikingFormerConfig(num_layers=2, d_model=96, n_heads=4, d_ff=384,
-                              time_steps=4, image_size=32, patch_grid=8,
-                              num_classes=4)
-    print(f"spikingformer params: {cfg.param_count():,}")
+    cfg = get_spikingformer_config("spikingformer-tiny",
+                                   backend=args.backend,
+                                   spike_mm=args.spike_mm)
+    print(f"spikingformer params: {cfg.param_count():,} "
+          f"backend={cfg.backend}")
     params, state = init_spikingformer(jax.random.PRNGKey(0), cfg)
     opt_cfg = OptimizerConfig(lr=2e-3, warmup_steps=20,
                               total_steps=args.steps, weight_decay=0.01)
     opt_state = init_opt_state(params)
+    train_step = make_spikingformer_train_step(cfg, opt_cfg)
     monitor = StragglerMonitor()
 
     for step in range(args.steps):
         monitor.step_start()
         imgs, labels = make_batch(step, args.batch)
-        grads, state, metrics = spikingformer_grad_step(params, state, imgs,
-                                                        labels, cfg)
-        params, opt_state, opt_m = adamw_update(params, grads, opt_state,
-                                                opt_cfg)
+        params, state, opt_state, metrics = train_step(params, state,
+                                                       opt_state, imgs,
+                                                       labels)
         monitor.step_end()
         if step % 20 == 0 or step == args.steps - 1:
             print(f"step {step:4d} loss {float(metrics['loss']):.4f} "
                   f"acc {float(metrics['accuracy']):.2f} "
-                  f"gnorm {float(opt_m['grad_norm']):.2f}", flush=True)
+                  f"gnorm {float(metrics['grad_norm']):.2f}", flush=True)
         if args.ckpt_dir and (step + 1) % 100 == 0:
             save_checkpoint(args.ckpt_dir, step + 1,
                             {"params": params, "bn": state}, async_save=True)

@@ -1,0 +1,47 @@
+"""Named Spikingformer presets with kernel-backend variants.
+
+Mirrors :mod:`repro.configs.registry` for the paper's own model family:
+``get_spikingformer_config("spikingformer-8-512")`` is the paper Table III
+training target; ``"spikingformer-smoke"`` is the CPU test/bench size shared
+by the parity tests and ``benchmarks/bench_model_table.py``.
+
+Backend variants are spelled ``<name>@<backend>`` (e.g.
+``spikingformer-smoke@pallas``) or requested via the ``backend=`` kwarg —
+the same parameters load under either backend.
+"""
+from __future__ import annotations
+
+from repro.core.backend import validate_backend
+from repro.core.spikingformer import SpikingFormerConfig
+
+SPIKINGFORMER_PRESETS: dict[str, SpikingFormerConfig] = {
+    # Paper Table III: L=8, d=512, h=8, T=4, 224x224, P=14.
+    "spikingformer-8-512": SpikingFormerConfig(),
+    # ~1M-param synthetic-task size used by examples/train_spikingformer.py.
+    "spikingformer-tiny": SpikingFormerConfig(
+        num_layers=2, d_model=96, n_heads=4, d_ff=384, time_steps=4,
+        image_size=32, patch_grid=8, num_classes=4),
+    # CPU smoke size for parity tests and the model-level backend A/B.
+    "spikingformer-smoke": SpikingFormerConfig(
+        num_layers=2, d_model=64, n_heads=2, d_ff=128, time_steps=2,
+        image_size=32, patch_grid=8, num_classes=10),
+}
+
+
+def list_spikingformer_configs() -> list[str]:
+    return sorted(SPIKINGFORMER_PRESETS)
+
+
+def get_spikingformer_config(name: str, *, backend: str | None = None,
+                             spike_mm: bool | None = None,
+                             interpret: bool | None = None
+                             ) -> SpikingFormerConfig:
+    """Look up a preset, optionally rebinding the execution backend."""
+    if "@" in name:
+        name, at_backend = name.rsplit("@", 1)
+        backend = backend or at_backend
+    cfg = SPIKINGFORMER_PRESETS[name]
+    if backend is not None or spike_mm is not None or interpret is not None:
+        cfg = cfg.with_backend(validate_backend(backend or cfg.backend),
+                               spike_mm=spike_mm, interpret=interpret)
+    return cfg

@@ -1,0 +1,71 @@
+"""Kernel-backend selection for the Spikingformer stack.
+
+Two execution backends implement the same math (E2ATST eq. 11-23):
+
+* ``"jnp"``    — pure ``lax.scan``/``jnp`` reference path. Always available,
+                 differentiable via JAX autodiff through the surrogate.
+* ``"pallas"`` — the fused SOMA/GRAD, BN and bit-packed spike-matmul Pallas
+                 kernels in :mod:`repro.kernels`, wired up with the paper's
+                 hand-derived VJPs (GRAD unit, eq. 12 / eq. 19-23). On CPU the
+                 kernels run in Pallas interpret mode (bit-exact emulation);
+                 on TPU the same code lowers to Mosaic with ``interpret=False``.
+
+The backend rides inside the frozen model configs (``LIFConfig.backend``,
+``BlockConfig.backend``, ``SpikingFormerConfig.backend``) so it is a static
+jit argument — switching backends retraces, it never adds runtime branches.
+
+``interpret`` resolution: every kernel wrapper in :mod:`repro.kernels.ops`
+takes ``interpret: bool | None``. ``None`` (the default) means "interpret
+unless we are actually on a TPU", so the identical model code validates on
+CPU and runs compiled on hardware. The old module-global ``INTERPRET`` flag
+is gone.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+#: The valid backend names, in preference order for tests/benchmarks.
+BACKENDS: tuple[str, ...] = ("jnp", "pallas")
+
+def validate_backend(backend: str) -> str:
+    """Return ``backend`` or raise with the list of valid names."""
+    if backend not in BACKENDS:
+        raise ValueError(
+            f"unknown backend {backend!r}; expected one of {BACKENDS}")
+    return backend
+
+
+def default_backend() -> str:
+    """The process-wide default backend, read live from the environment so
+    quick A/Bs work (``REPRO_BACKEND=pallas python examples/...``) even when
+    the variable is set after this module was first imported."""
+    return validate_backend(os.environ.get("REPRO_BACKEND", "jnp"))
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """Per-call Pallas interpret switch.
+
+    ``None`` -> interpret mode everywhere except a real TPU backend, where
+    the kernels lower to Mosaic. An explicit bool always wins (tests force
+    ``True``; a TPU soak can force ``False``).
+    """
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+def fold_time_major(x: jax.Array) -> tuple[jax.Array, tuple[int, ...]]:
+    """(T, ..., D) -> ((T, M, D), original_shape) with M = prod(middle dims).
+
+    The fused kernels operate on time-major 3-D blocks; LIF/BN are
+    element-/feature-wise over the folded axes so the reshape is exact.
+    """
+    t, d = x.shape[0], x.shape[-1]
+    return x.reshape(t, -1, d), x.shape
+
+
+def fold_rows(x: jax.Array) -> tuple[jax.Array, tuple[int, ...]]:
+    """(..., D) -> ((M, D), original_shape): row-fold for per-feature BN."""
+    return x.reshape(-1, x.shape[-1]), x.shape

@@ -13,6 +13,11 @@ non-differentiable Heaviside is given a rectangular surrogate:
 
 The reset path is kept *attached* (not detached), so the -alpha*U_t term of the
 paper's \nabla S_t recursion is present in the VJP, exactly matching eq. 12.
+
+``LIFConfig.backend`` selects the execution backend for ``lif_scan``:
+``"jnp"`` is the pure ``lax.scan`` above; ``"pallas"`` folds the input to
+(T, M, D) and runs the fused SOMA/GRAD kernel pair
+(``repro.kernels.ops.lif_soma_op``) whose custom VJP *is* eq. 12.
 """
 from __future__ import annotations
 
@@ -21,6 +26,8 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.backend import validate_backend
 
 
 @dataclasses.dataclass(frozen=True)
@@ -32,6 +39,16 @@ class LIFConfig:
     th_lo: float = 0.0          # surrogate window lower bound  (paper: th_f < U < th_r
     th_hi: float = 2.0          #   one-sided; we centre the window on th_f)
     grad_scale: float = 1.0     # surrogate magnitude inside the window
+    backend: str = "jnp"        # "jnp" (lax.scan) | "pallas" (fused SOMA/GRAD)
+    interpret: bool | None = None  # Pallas interpret override (None = auto)
+
+    def with_backend(self, backend: str,
+                     interpret: bool | None = None) -> "LIFConfig":
+        """Rebind the backend; ``interpret=None`` keeps the current value."""
+        if interpret is None:
+            interpret = self.interpret
+        return dataclasses.replace(self, backend=validate_backend(backend),
+                                   interpret=interpret)
 
 
 @jax.custom_vjp
@@ -72,6 +89,19 @@ def lif_step(u_prev: jax.Array, s_prev: jax.Array, x: jax.Array,
     return u, s
 
 
+def _lif_scan_pallas(x_seq: jax.Array, cfg: LIFConfig) -> jax.Array:
+    """Fused-kernel dispatch: fold (T, ..., D) -> (T, M, D), run the SOMA op
+    (GRAD kernel in the VJP), and unfold. LIF is elementwise over the folded
+    axes so the reshape is exact."""
+    from repro.core.backend import fold_time_major
+    from repro.kernels import ops  # deferred: keep the jnp path import-light
+
+    x3, shape = fold_time_major(x_seq)
+    s = ops.lif_soma_op(x3, cfg.alpha, cfg.th_fire, cfg.th_lo, cfg.th_hi,
+                        cfg.grad_scale, cfg.interpret)
+    return s.reshape(shape)
+
+
 @partial(jax.jit, static_argnames=("cfg",))
 def lif_scan(x_seq: jax.Array, cfg: LIFConfig) -> jax.Array:
     """Multi-step LIF over the leading time axis.
@@ -79,8 +109,11 @@ def lif_scan(x_seq: jax.Array, cfg: LIFConfig) -> jax.Array:
     x_seq: (T, ...) membrane input currents (post-BN, per eq. 11).
     Returns spikes (T, ...) with the same dtype. State starts at rest (0).
     This is the BPTT-differentiable SOMA module; ``jax.grad`` through it
-    reproduces the GRAD recursion of eq. 12.
+    reproduces the GRAD recursion of eq. 12 — on the ``"pallas"`` backend
+    the recursion runs as the fused GRAD kernel itself.
     """
+    if cfg.backend == "pallas" and x_seq.ndim >= 2:
+        return _lif_scan_pallas(x_seq, cfg)
     u0 = jnp.zeros_like(x_seq[0])
     s0 = jnp.zeros_like(x_seq[0])
 

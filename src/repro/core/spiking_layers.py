@@ -18,6 +18,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.core.backend import fold_rows
 from repro.core.lif import LIFConfig, lif_scan
 
 Params = dict[str, Any]
@@ -36,9 +37,27 @@ def init_bn(dim: int, dtype=jnp.float32) -> tuple[Params, State]:
 
 
 def bn_apply(params: Params, state: State, x: jax.Array, *, train: bool,
-             momentum: float = 0.9, eps: float = 1e-5):
+             momentum: float = 0.9, eps: float = 1e-5, backend: str = "jnp",
+             interpret: bool | None = None):
     """BatchNorm over all axes but the last (features d), following the
-    paper's E[x^2] - mu^2 formulation (eq. 14-15). Statistics in fp32."""
+    paper's E[x^2] - mu^2 formulation (eq. 14-15). Statistics in fp32.
+
+    ``backend="pallas"`` routes the training path through the fused BN
+    FP/BP kernel pair (``ops.bn_train_op``, eq. 13-23): one VMEM visit
+    computes stats and normalizes; the batch mu/var the kernel already
+    computed are blended into the running stats (no second pass over x).
+    Eval always uses the running-stat jnp path.
+    """
+    if train and backend == "pallas":
+        from repro.kernels import ops
+
+        x2, shape = fold_rows(x)
+        y, mu, var = ops.bn_train_op(x2, params["gamma"], params["beta"],
+                                     eps, interpret)
+        var = jnp.maximum(var, 0.0)   # sqrt_d^2 - eps can round below zero
+        new_state = {"mean": momentum * state["mean"] + (1 - momentum) * mu,
+                     "var": momentum * state["var"] + (1 - momentum) * var}
+        return y.reshape(shape), new_state
     axes = tuple(range(x.ndim - 1))
     if train:
         xf = x.astype(jnp.float32)
@@ -77,10 +96,27 @@ def init_linear_bn(key, d_in: int, d_out: int, dtype=jnp.float32):
     return {"linear": params, "bn": bn_p}, {"bn": bn_s}
 
 
-def linear_bn_apply(params: Params, state: State, x: jax.Array, *, train: bool):
-    """The paper's Conv1DBN: spike (or real) input -> MM -> BN."""
-    y = linear_apply(params["linear"], x)
-    y, bn_s = bn_apply(params["bn"], state["bn"], y, train=train)
+def linear_bn_apply(params: Params, state: State, x: jax.Array, *, train: bool,
+                    backend: str = "jnp", spike_mm: bool = False,
+                    interpret: bool | None = None):
+    """The paper's Conv1DBN: spike (or real) input -> MM -> BN.
+
+    With ``backend="pallas"`` and ``spike_mm=True`` the matmul runs as the
+    bit-packed spike kernel (inputs must be {0,1} spikes — true at every
+    Conv1DBN site in PSSA/SMLP, which all consume LIF outputs). Falls back
+    to the dense path when the contraction dim is not a multiple of 8.
+    """
+    w = params["linear"]["w"]
+    if (backend == "pallas" and spike_mm and x.shape[-1] % 8 == 0):
+        from repro.kernels import ops
+
+        x2, shape = fold_rows(x)
+        y = ops.spike_matmul_train_op(x2, w.astype(x.dtype), interpret)
+        y = y.reshape(*shape[:-1], w.shape[-1])
+    else:
+        y = linear_apply(params["linear"], x)
+    y, bn_s = bn_apply(params["bn"], state["bn"], y, train=train,
+                       backend=backend, interpret=interpret)
     return y, {"bn": bn_s}
 
 
@@ -99,6 +135,15 @@ class PSSAConfig:
     # False: Q (K^T V) — algebraically identical (no softmax!), O(S d^2);
     #        this is the beyond-paper TPU optimization (see DESIGN.md §3).
     qk_first: bool = True
+    backend: str = "jnp"        # kernel backend for LIF/BN/matmul sites
+    spike_mm: bool = False      # route Conv1DBN matmuls via the packed kernel
+    interpret: bool | None = None
+
+    @property
+    def lif_cfg(self) -> LIFConfig:
+        """The LIF config with this layer's backend injected (single switch)."""
+        return dataclasses.replace(self.lif, backend=self.backend,
+                                   interpret=self.interpret)
 
 
 def init_pssa(key, cfg: PSSAConfig, dtype=jnp.float32):
@@ -125,13 +170,15 @@ def _merge_heads(x: jax.Array) -> jax.Array:
 def pssa_apply(params: Params, state: State, x: jax.Array, cfg: PSSAConfig,
                *, train: bool):
     """x: (T,B,N,D) real-valued features -> (T,B,N,D); residual added by caller."""
-    xs = lif_scan(x, cfg.lif)                                   # eq. 8  X' = SN(X)
-    q, s_q = linear_bn_apply(params["q"], state["q"], xs, train=train)
-    k, s_k = linear_bn_apply(params["k"], state["k"], xs, train=train)
-    v, s_v = linear_bn_apply(params["v"], state["v"], xs, train=train)
-    qs = lif_scan(q, cfg.lif)                                   # eq. 9 (spike Q/K/V)
-    ks = lif_scan(k, cfg.lif)
-    vs = lif_scan(v, cfg.lif)
+    lbn = dict(train=train, backend=cfg.backend, spike_mm=cfg.spike_mm,
+               interpret=cfg.interpret)
+    xs = lif_scan(x, cfg.lif_cfg)                               # eq. 8  X' = SN(X)
+    q, s_q = linear_bn_apply(params["q"], state["q"], xs, **lbn)
+    k, s_k = linear_bn_apply(params["k"], state["k"], xs, **lbn)
+    v, s_v = linear_bn_apply(params["v"], state["v"], xs, **lbn)
+    qs = lif_scan(q, cfg.lif_cfg)                               # eq. 9 (spike Q/K/V)
+    ks = lif_scan(k, cfg.lif_cfg)
+    vs = lif_scan(v, cfg.lif_cfg)
 
     qh, kh, vh = (_split_heads(a, cfg.n_heads) for a in (qs, ks, vs))
     if cfg.qk_first:
@@ -141,8 +188,8 @@ def pssa_apply(params: Params, state: State, x: jax.Array, cfg: PSSAConfig,
         kv = jnp.einsum("tbhmd,tbhme->tbhde", kh, vh)
         out = jnp.einsum("tbhnd,tbhde->tbhne", qh, kv)
     out = _merge_heads(out) * cfg.scale                          # eq. 10 (* s)
-    out_s = lif_scan(out, cfg.lif)                               # SN(...)
-    z, s_z = linear_bn_apply(params["z"], state["z"], out_s, train=train)
+    out_s = lif_scan(out, cfg.lif_cfg)                           # SN(...)
+    z, s_z = linear_bn_apply(params["z"], state["z"], out_s, **lbn)
     return z, {"q": s_q, "k": s_k, "v": s_v, "z": s_z}
 
 
@@ -155,6 +202,14 @@ class SMLPConfig:
     d_model: int
     d_ff: int
     lif: LIFConfig = LIFConfig()
+    backend: str = "jnp"
+    spike_mm: bool = False
+    interpret: bool | None = None
+
+    @property
+    def lif_cfg(self) -> LIFConfig:
+        return dataclasses.replace(self.lif, backend=self.backend,
+                                   interpret=self.interpret)
 
 
 def init_smlp(key, cfg: SMLPConfig, dtype=jnp.float32):
@@ -166,10 +221,12 @@ def init_smlp(key, cfg: SMLPConfig, dtype=jnp.float32):
 
 def smlp_apply(params: Params, state: State, x: jax.Array, cfg: SMLPConfig,
                *, train: bool):
-    xs = lif_scan(x, cfg.lif)                 # pre-activation SN
-    h, s_a = linear_bn_apply(params["a"], state["a"], xs, train=train)
-    hs = lif_scan(h, cfg.lif)
-    y, s_b = linear_bn_apply(params["b"], state["b"], hs, train=train)
+    lbn = dict(train=train, backend=cfg.backend, spike_mm=cfg.spike_mm,
+               interpret=cfg.interpret)
+    xs = lif_scan(x, cfg.lif_cfg)             # pre-activation SN
+    h, s_a = linear_bn_apply(params["a"], state["a"], xs, **lbn)
+    hs = lif_scan(h, cfg.lif_cfg)
+    y, s_b = linear_bn_apply(params["b"], state["b"], hs, **lbn)
     return y, {"a": s_a, "b": s_b}
 
 
@@ -185,15 +242,22 @@ class BlockConfig:
     lif: LIFConfig = LIFConfig()
     qk_first: bool = True
     attn_scale: float = 0.125
+    backend: str = "jnp"        # one switch for every LIF/BN/matmul in the block
+    spike_mm: bool = False
+    interpret: bool | None = None
 
     @property
     def pssa(self) -> PSSAConfig:
         return PSSAConfig(self.d_model, self.n_heads, self.lif,
-                          self.attn_scale, self.qk_first)
+                          self.attn_scale, self.qk_first,
+                          backend=self.backend, spike_mm=self.spike_mm,
+                          interpret=self.interpret)
 
     @property
     def smlp(self) -> SMLPConfig:
-        return SMLPConfig(self.d_model, self.d_ff, self.lif)
+        return SMLPConfig(self.d_model, self.d_ff, self.lif,
+                          backend=self.backend, spike_mm=self.spike_mm,
+                          interpret=self.interpret)
 
 
 def init_block(key, cfg: BlockConfig, dtype=jnp.float32):

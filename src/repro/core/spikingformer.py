@@ -44,11 +44,35 @@ class SpikingFormerConfig:
     attn_scale: float = 0.125
     dtype: Any = jnp.float32
     remat: bool = False               # checkpoint each block over the scan
+    # Kernel backend for every LIF/BN/matmul site: "jnp" (lax.scan reference)
+    # or "pallas" (fused SOMA/GRAD + BN + packed spike-MM kernels).
+    backend: str = "jnp"
+    spike_mm: bool = False            # packed spike matmuls in Conv1DBN sites
+    interpret: bool | None = None     # Pallas interpret override (None = auto)
 
     @property
     def block(self) -> BlockConfig:
         return BlockConfig(self.d_model, self.n_heads, self.d_ff, self.lif,
-                           self.qk_first, self.attn_scale)
+                           self.qk_first, self.attn_scale,
+                           backend=self.backend, spike_mm=self.spike_mm,
+                           interpret=self.interpret)
+
+    @property
+    def lif_cfg(self) -> LIFConfig:
+        """Tokenizer-site LIF config with the model backend injected."""
+        return dataclasses.replace(self.lif, backend=self.backend,
+                                   interpret=self.interpret)
+
+    def with_backend(self, backend: str, *, spike_mm: bool | None = None,
+                     interpret: bool | None = None) -> "SpikingFormerConfig":
+        """Same model, different execution backend (params are compatible)."""
+        from repro.core.backend import validate_backend
+        kw: dict[str, Any] = {"backend": validate_backend(backend)}
+        if spike_mm is not None:
+            kw["spike_mm"] = spike_mm
+        if interpret is not None:
+            kw["interpret"] = interpret
+        return dataclasses.replace(self, **kw)
 
     @property
     def num_tokens(self) -> int:
@@ -115,11 +139,12 @@ def tokenizer_apply(params, state, images, cfg: SpikingFormerConfig, *,
     for p, s in zip(params, state):
         x = _conv_apply(p["conv"], x)
         # BN over (TB,H,W) per channel; LIF scans time, so unfold T.
-        y, s_bn = bn_apply(p["bn"], s["bn"], x, train=train)
+        y, s_bn = bn_apply(p["bn"], s["bn"], x, train=train,
+                           backend=cfg.backend, interpret=cfg.interpret)
         new_states.append({"bn": s_bn})
         th, hh, wh, ch = y.shape
         y = y.reshape(t, b, hh, wh, ch)
-        y = lif_scan(y, cfg.lif)
+        y = lif_scan(y, cfg.lif_cfg)
         x = y.reshape(t * b, hh, wh, ch)
     x = x.reshape(t, b, -1, x.shape[-1])       # (T, B, N, D)
     return x, new_states

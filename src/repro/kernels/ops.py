@@ -1,10 +1,11 @@
 """Public jit'd kernel wrappers, differentiable via the paper's GRAD unit.
 
-``lif_soma`` is a custom-VJP op whose forward is the SOMA Pallas kernel and
+``lif_soma_op`` is a custom-VJP op whose forward is the SOMA Pallas kernel and
 whose backward is the GRAD Pallas kernel — the exact FP/BP pairing of the
-E2ATST reuse framework (Fig. 4). ``INTERPRET`` flips every kernel to Pallas
-interpret mode (Python emulation) so the whole stack validates on CPU; on a
-real TPU it is set False and the same code lowers to Mosaic.
+E2ATST reuse framework (Fig. 4). Every wrapper takes ``interpret: bool | None``
+per call: ``None`` resolves via :func:`repro.core.backend.resolve_interpret`
+(interpret mode everywhere except a real TPU), replacing the old module-global
+``INTERPRET`` flag so one process can mix compiled and emulated calls.
 """
 from __future__ import annotations
 
@@ -13,67 +14,114 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.core.backend import resolve_interpret
 from repro.kernels import fused_bn, lif_soma, spike_matmul
 
-# CPU container: interpret mode. On TPU set repro.kernels.ops.INTERPRET=False.
-INTERPRET = True
 
-
-@partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5))
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5, 6))
 def lif_soma_op(x: jax.Array, alpha: float = 0.5, th_fire: float = 1.0,
                 th_lo: float = 0.0, th_hi: float = 2.0,
-                grad_scale: float = 1.0) -> jax.Array:
+                grad_scale: float = 1.0,
+                interpret: bool | None = None) -> jax.Array:
     """Differentiable fused LIF over (T, M, D); returns spikes."""
     s, _, _ = lif_soma.lif_soma_fwd(x, alpha=alpha, th_fire=th_fire,
                                     th_lo=th_lo, th_hi=th_hi,
-                                    interpret=INTERPRET)
+                                    interpret=resolve_interpret(interpret))
     return s
 
 
-def _lif_fwd(x, alpha, th_fire, th_lo, th_hi, grad_scale):
+def _lif_fwd(x, alpha, th_fire, th_lo, th_hi, grad_scale, interpret):
     s, u, mask = lif_soma.lif_soma_fwd(x, alpha=alpha, th_fire=th_fire,
                                        th_lo=th_lo, th_hi=th_hi,
-                                       interpret=INTERPRET)
+                                       interpret=resolve_interpret(interpret))
     return s, (u, s, mask)
 
 
-def _lif_bwd(alpha, th_fire, th_lo, th_hi, grad_scale, res, g):
+def _lif_bwd(alpha, th_fire, th_lo, th_hi, grad_scale, interpret, res, g):
     u, s, mask = res
     dx = lif_soma.lif_soma_bwd(g, u, s, mask, alpha=alpha,
-                               grad_scale=grad_scale, interpret=INTERPRET)
+                               grad_scale=grad_scale,
+                               interpret=resolve_interpret(interpret))
     return (dx,)
 
 
 lif_soma_op.defvjp(_lif_fwd, _lif_bwd)
 
 
-@jax.custom_vjp
-def bn_train_op(x: jax.Array, gamma: jax.Array, beta: jax.Array):
-    """Differentiable fused training BatchNorm over (M, D)."""
-    y, _, _ = fused_bn.bn_fwd(x, gamma, beta, interpret=INTERPRET)
-    return y
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def bn_train_op(x: jax.Array, gamma: jax.Array, beta: jax.Array,
+                eps: float = 1e-5, interpret: bool | None = None):
+    """Differentiable fused training BatchNorm over (M, D).
+
+    Returns ``(y, mu, var)``: the kernel already computes the batch
+    statistics in its single VMEM visit, so they are surfaced (fp32, shape
+    (D,)) for the caller's running-stat blend instead of being recomputed
+    with a second pass over ``x``. Only ``y`` carries gradients; ``mu``/
+    ``var`` are constants of the VJP (their cotangents are discarded).
+    """
+    y, mu, sqrt_d = fused_bn.bn_fwd(x, gamma, beta, eps=eps,
+                                    interpret=resolve_interpret(interpret))
+    return y, mu.reshape(-1), jnp.square(sqrt_d).reshape(-1) - eps
 
 
-def _bn_fwd(x, gamma, beta):
-    y, mu, sqrt_d = fused_bn.bn_fwd(x, gamma, beta, interpret=INTERPRET)
-    return y, (x, gamma, mu, sqrt_d)
+def _bn_fwd(x, gamma, beta, eps, interpret):
+    y, mu, sqrt_d = fused_bn.bn_fwd(x, gamma, beta, eps=eps,
+                                    interpret=resolve_interpret(interpret))
+    out = (y, mu.reshape(-1), jnp.square(sqrt_d).reshape(-1) - eps)
+    return out, (x, gamma, mu, sqrt_d)
 
 
-def _bn_bwd(res, g):
+def _bn_bwd(eps, interpret, res, g):
     x, gamma, mu, sqrt_d = res
-    dx, dgamma, dbeta = fused_bn.bn_bwd(g, x, gamma, mu, sqrt_d,
-                                        interpret=INTERPRET)
+    gy = g[0]  # mu/var cotangents: running stats sit outside the loss graph
+    dx, dgamma, dbeta = fused_bn.bn_bwd(gy, x, gamma, mu, sqrt_d,
+                                        interpret=resolve_interpret(interpret))
     return dx, dgamma.reshape(gamma.shape), dbeta.reshape(gamma.shape)
 
 
 bn_train_op.defvjp(_bn_fwd, _bn_bwd)
 
 
-def spike_matmul_op(spikes: jax.Array, w: jax.Array) -> jax.Array:
-    """Bit-packed spike matmul (forward-only fast path for serving; training
-    uses the dense bf16 path so the WG stage sees the spike values)."""
-    return spike_matmul.spike_matmul(spikes, w, interpret=INTERPRET)
+@partial(jax.custom_vjp, nondiff_argnums=(2,))
+def spike_matmul_train_op(spikes: jax.Array, w: jax.Array,
+                          interpret: bool | None = None) -> jax.Array:
+    """Differentiable bit-packed spike matmul: (M, C) {0,1} x (C, K).
+
+    FP packs the spikes to 1 bit/element and runs the Pallas MXU kernel (16x
+    less HBM input traffic than bf16); BP is the dense matmul VJP — the WG
+    stage needs the real spike values (dW = S^T g), and dS = g W^T feeds the
+    upstream LIF surrogate exactly as in the dense path. C must be a multiple
+    of 8 (packing granularity).
+    """
+    return spike_matmul.spike_matmul(spikes, w,
+                                     interpret=resolve_interpret(interpret))
 
 
-def spike_matmul_packed_op(packed: jax.Array, w: jax.Array) -> jax.Array:
-    return spike_matmul.spike_matmul_packed(packed, w, interpret=INTERPRET)
+def _smm_fwd(spikes, w, interpret):
+    out = spike_matmul.spike_matmul(spikes, w,
+                                    interpret=resolve_interpret(interpret))
+    return out, (spikes, w)
+
+
+def _smm_bwd(interpret, res, g):
+    spikes, w = res
+    d_spikes = (g @ w.T.astype(g.dtype)).astype(spikes.dtype)
+    d_w = (spikes.astype(g.dtype).T @ g).astype(w.dtype)
+    return d_spikes, d_w
+
+
+spike_matmul_train_op.defvjp(_smm_fwd, _smm_bwd)
+
+
+def spike_matmul_op(spikes: jax.Array, w: jax.Array,
+                    interpret: bool | None = None) -> jax.Array:
+    """Bit-packed spike matmul (forward-only fast path for serving; for
+    training use ``spike_matmul_train_op``, which adds the dense VJP)."""
+    return spike_matmul.spike_matmul(spikes, w,
+                                     interpret=resolve_interpret(interpret))
+
+
+def spike_matmul_packed_op(packed: jax.Array, w: jax.Array,
+                           interpret: bool | None = None) -> jax.Array:
+    return spike_matmul.spike_matmul_packed(
+        packed, w, interpret=resolve_interpret(interpret))

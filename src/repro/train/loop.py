@@ -62,6 +62,29 @@ def make_train_step(cfg: ArchConfig, opt_cfg: OptimizerConfig,
     return train_step
 
 
+def make_spikingformer_train_step(cfg, opt_cfg: OptimizerConfig) -> Callable:
+    """Fused BPTT + AdamW step for the Spikingformer vision path.
+
+    ``cfg`` is a :class:`repro.core.spikingformer.SpikingFormerConfig`; its
+    ``backend`` field selects the jnp or fused-Pallas execution path, so the
+    same train step runs the reference scan on CPU and the SOMA/GRAD kernels
+    on TPU. Returns ``step(params, state, opt_state, images, labels) ->
+    (params, state, opt_state, metrics)`` where ``state`` carries BN running
+    statistics.
+    """
+    from repro.core.spikingformer import spikingformer_grad_step
+
+    @jax.jit
+    def train_step(params, state, opt_state, images, labels):
+        grads, new_state, metrics = spikingformer_grad_step(
+            params, state, images, labels, cfg)
+        new_params, new_opt, opt_metrics = adamw_update(
+            params, grads, opt_state, opt_cfg)
+        return new_params, new_state, new_opt, {**metrics, **opt_metrics}
+
+    return train_step
+
+
 def make_eval_step(cfg: ArchConfig) -> Callable:
     loss_fn = _loss_fn_for(cfg)
 

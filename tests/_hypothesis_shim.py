@@ -1,0 +1,85 @@
+"""Deterministic stand-in for the slice of the hypothesis API this suite uses.
+
+On a bare environment (no ``hypothesis`` installed) the property tests import
+``given``/``settings``/``strategies`` from here instead of skipping: each
+``@given`` test runs a small, fixed number of examples drawn from a PRNG
+seeded by the test name, so failures reproduce exactly. With hypothesis
+installed the real library is used (see the ``try/except`` at each import
+site) and this module is inert.
+
+Implemented strategies: ``floats``, ``integers``, ``sampled_from``,
+``builds`` — extend here if a test needs more.
+"""
+from __future__ import annotations
+
+import functools
+import random
+
+#: Example budget for the fallback runner (hypothesis's own max_examples is
+#: honoured as an upper bound but capped here to keep tier-1 fast; several
+#: property tests retrace jit per drawn shape, so each example costs ~1s).
+FALLBACK_MAX_EXAMPLES = 5
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+def _floats(min_value, max_value):
+    return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+
+def _integers(min_value, max_value):
+    return _Strategy(lambda r: r.randint(min_value, max_value))
+
+
+def _sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(lambda r: r.choice(elements))
+
+
+def _builds(target, *arg_strats, **kw_strats):
+    return _Strategy(lambda r: target(
+        *[s.draw(r) for s in arg_strats],
+        **{k: s.draw(r) for k, s in kw_strats.items()}))
+
+
+class strategies:  # noqa: N801 - mimics the ``hypothesis.strategies`` module
+    floats = staticmethod(_floats)
+    integers = staticmethod(_integers)
+    sampled_from = staticmethod(_sampled_from)
+    builds = staticmethod(_builds)
+
+
+def given(**kw_strategies):
+    """Run the test body over deterministic draws of the named strategies."""
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = min(getattr(wrapper, "_max_examples", FALLBACK_MAX_EXAMPLES),
+                    FALLBACK_MAX_EXAMPLES)
+            rng = random.Random(fn.__qualname__)
+            for _ in range(n):
+                drawn = {k: s.draw(rng) for k, s in kw_strategies.items()}
+                fn(*args, **kwargs, **drawn)
+
+        # pytest resolves fixtures from the *unwrapped* signature; drop the
+        # wraps() link so the strategy params are not mistaken for fixtures.
+        wrapper.__dict__.pop("__wrapped__", None)
+        wrapper._shim_given = True
+        return wrapper
+
+    return deco
+
+
+def settings(max_examples: int | None = None, **_ignored):
+    """Accepts (and mostly ignores) hypothesis settings kwargs."""
+
+    def deco(fn):
+        if max_examples is not None:
+            fn._max_examples = max_examples
+        return fn
+
+    return deco

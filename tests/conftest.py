@@ -1,0 +1,47 @@
+"""Shared fixtures and bare-environment defaults for the test suite.
+
+* Puts ``src/`` on ``sys.path`` so ``pytest -q`` works without exporting
+  ``PYTHONPATH`` (the tier-1 command still sets it; both are fine).
+* Pins CPU-safe numeric defaults: x64 stays off so tolerances mean the same
+  thing everywhere the suite runs.
+* ``rng_key`` / ``make_key`` fixtures replace hand-rolled ``PRNGKey`` calls —
+  fixed seeds, derived deterministically.
+"""
+from __future__ import annotations
+
+import os
+import sys
+from pathlib import Path
+
+_SRC = Path(__file__).resolve().parent.parent / "src"
+if str(_SRC) not in sys.path:
+    sys.path.insert(0, str(_SRC))
+
+# CPU/x64-safe defaults: keep f32 semantics identical across machines and
+# make sure a leaked XLA device-count flag never reaches this process.
+os.environ.setdefault("JAX_ENABLE_X64", "0")
+
+import jax  # noqa: E402  (after sys.path setup)
+import pytest  # noqa: E402
+
+# The suite is XLA-compile dominated; the persistent compilation cache cuts
+# warm reruns to a fraction of the cold time (cache keys include jax
+# version + compile options, so it never masks behavior changes).
+try:
+    _cache = os.environ.get("JAX_COMPILATION_CACHE_DIR",
+                            str(Path(__file__).parent / ".jax_cache"))
+    jax.config.update("jax_compilation_cache_dir", _cache)
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+except Exception:  # older jax without the persistent cache: run cold
+    pass
+
+@pytest.fixture
+def rng_key():
+    """The suite's fixed seed key. Split it; don't invent new seeds."""
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture
+def make_key():
+    """Factory for auxiliary fixed-seed keys: ``make_key(i)``."""
+    return jax.random.PRNGKey

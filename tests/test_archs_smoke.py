@@ -1,6 +1,10 @@
 """Per-architecture smoke tests: every assigned arch in REDUCED form runs a
 forward + train step on CPU, asserts output shapes and no NaNs, and (where
-the family supports it) a decode step against a fresh cache."""
+the family supports it) a decode step against a fresh cache.
+
+The 10-arch sweep costs minutes of XLA compiles, so most of it is ``slow``
+(opt-in full run: ``pytest -m slow``); tier-1 keeps a cheap representative
+subset (``FAST_ARCHS``) plus the pure-python param-count sanity check."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -8,6 +12,15 @@ import pytest
 
 from repro.configs.registry import ASSIGNED, get_config, reduced
 from repro.models.common import split_tree
+
+# Archs that stay in tier-1 (fast compiles; dense family + decode coverage).
+FAST_ARCHS = {"qwen3-0.6b"}
+
+
+def _arch_params(names):
+    return [pytest.param(n, marks=() if n in FAST_ARCHS
+                         else pytest.mark.slow) for n in names]
+
 
 KEY = jax.random.PRNGKey(0)
 
@@ -32,7 +45,7 @@ def _batch(cfg, b=2, s=16):
     return batch
 
 
-@pytest.mark.parametrize("name", ASSIGNED)
+@pytest.mark.parametrize("name", _arch_params(ASSIGNED))
 def test_forward_and_train_step(name):
     cfg = reduced(get_config(name))
     params = _params(cfg)
@@ -49,7 +62,7 @@ def test_forward_and_train_step(name):
     assert float(loss) == pytest.approx(np.log(cfg.vocab_size), rel=0.2)
 
 
-@pytest.mark.parametrize("name", ASSIGNED)
+@pytest.mark.parametrize("name", _arch_params(ASSIGNED))
 def test_decode_step(name):
     cfg = reduced(get_config(name))
     params = _params(cfg)
@@ -73,8 +86,9 @@ def test_decode_step(name):
     assert not bool(jnp.isnan(logits2).any())
 
 
-@pytest.mark.parametrize("name", ["qwen3-0.6b", "rwkv6-7b", "zamba2-2.7b",
-                                  "mixtral-8x7b", "whisper-large-v3"])
+@pytest.mark.parametrize("name", _arch_params(["qwen3-0.6b", "rwkv6-7b",
+                                               "zamba2-2.7b", "mixtral-8x7b",
+                                               "whisper-large-v3"]))
 def test_decode_matches_forward(name):
     """Teacher-forced decode == training forward, position by position."""
     cfg = reduced(get_config(name))

@@ -22,7 +22,12 @@ def _params(cfg=CFG):
     return split_tree(init_attention(KEY, cfg))[0]
 
 
-@pytest.mark.parametrize("kv_chunk", [4, 8, 16])
+@pytest.mark.parametrize("kv_chunk", [
+    # one chunking in tier-1; the sweep (each a fresh compile) is slow
+    pytest.param(4, marks=pytest.mark.slow),
+    8,
+    pytest.param(16, marks=pytest.mark.slow),
+])
 def test_flash_equals_standard(kv_chunk):
     p = _params()
     x = jax.random.normal(KEY, (2, 32, 64))

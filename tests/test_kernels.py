@@ -10,7 +10,12 @@ KEY = jax.random.PRNGKey(42)
 
 
 @pytest.mark.parametrize("t", [1, 2, 4, 6])
-@pytest.mark.parametrize("shape", [(32, 64), (100, 96), (256, 128)])
+@pytest.mark.parametrize("shape", [
+    (32, 64),
+    # bigger tiles exercise the same kernel at higher interpret cost: slow
+    pytest.param((100, 96), marks=pytest.mark.slow),
+    pytest.param((256, 128), marks=pytest.mark.slow),
+])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_lif_soma_fwd(t, shape, dtype):
     x = (jax.random.normal(KEY, (t, *shape)) * 2).astype(dtype)
@@ -108,7 +113,7 @@ def test_bn_train_op_grads():
     gamma, beta = jnp.ones((32,)), jnp.zeros((32,))
 
     def loss_k(x, gm, bt):
-        return jnp.sum(ops.bn_train_op(x, gm, bt) ** 2)
+        return jnp.sum(ops.bn_train_op(x, gm, bt)[0] ** 2)
 
     def loss_r(x, gm, bt):
         return jnp.sum(ref.bn_fwd_ref(x, gm, bt)[0] ** 2)

@@ -10,8 +10,15 @@ from repro.launch.mesh import apply_fsdp, sanitize_specs
 
 
 def make_meta_mesh(data: int, model: int):
-    """Metadata-only mesh (no devices needed) for spec-transform tests."""
-    return jax.sharding.AbstractMesh((data, model), ("data", "model"))
+    """Metadata-only mesh (no devices needed) for spec-transform tests.
+
+    Handles both AbstractMesh signatures: new jax takes
+    ``(((name, size), ...))`` pairs, older jax takes ``(sizes, names)``.
+    """
+    try:
+        return jax.sharding.AbstractMesh((("data", data), ("model", model)))
+    except TypeError:
+        return jax.sharding.AbstractMesh((data, model), ("data", "model"))
 from repro.launch.specs import SHAPES
 
 

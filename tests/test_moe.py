@@ -5,7 +5,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # bare env: deterministic fallback shim
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.models.common import split_tree
 from repro.models.moe import (MoEConfig, _expert_positions, _route, init_moe,

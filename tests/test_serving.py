@@ -18,6 +18,7 @@ def _engine(name, **kw):
     return ServingEngine(params, cfg, slots=4, max_seq=64, **kw), params, cfg
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("name", ["qwen3-0.6b", "rwkv6-7b"])
 def test_greedy_matches_manual_decode(name):
     engine, params, cfg = _engine(name)
