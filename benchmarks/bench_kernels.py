@@ -31,12 +31,13 @@ def run(smoke: bool = False) -> list[str]:
     ref_us = _time(lambda a: ref.lif_soma_fwd_ref(a)[0], x, reps=reps)
     lines.append(f"lif_soma_pallas_interp,{us:.0f},ref_jnp={ref_us:.0f}us")
 
-    # The dispatching model API (lif_scan) on both backends — this is the
-    # path the Spikingformer hot loop actually takes.
+    # The dispatching model API (lif_scan) under both policies — this is
+    # the path the Spikingformer hot loop actually takes.
     from repro.core.lif import LIFConfig, lif_scan
+    from repro.core.policy import ExecutionPolicy
     us_j = _time(lambda a: lif_scan(a, LIFConfig()), x, reps=reps)
-    us_p = _time(lambda a: lif_scan(a, LIFConfig(backend="pallas")), x,
-                 reps=reps)
+    us_p = _time(lambda a: lif_scan(
+        a, LIFConfig(policy=ExecutionPolicy(backend="pallas"))), x, reps=reps)
     lines.append(f"lif_scan_backend_ab,{us_p:.0f},jnp={us_j:.0f}us")
 
     sp = (jax.random.uniform(key, (m, c)) < 0.2).astype(jnp.float32)
@@ -49,6 +50,19 @@ def run(smoke: bool = False) -> list[str]:
     ratio = sp.astype(jnp.bfloat16).nbytes / packed.nbytes
     lines.append(f"spike_matmul_packed,{us:.0f},ref={ref_us:.0f}us;"
                  f"hbm_input_bytes_saved={ratio:.0f}x")
+
+    # Packed batched spike matmul — the (QK^T)V attention contraction shape
+    # (G = T*B*heads batch axis) vs the einsum it replaces.
+    g_b, n_tok, dh = (8, 64, 32) if smoke else (32, 196, 64)
+    spb = (jax.random.uniform(key, (g_b, n_tok, dh)) < 0.2
+           ).astype(jnp.float32)
+    kb = (jax.random.uniform(key, (g_b, n_tok, dh)) < 0.2
+          ).astype(jnp.float32).transpose(0, 2, 1)
+    us = _time(lambda s, ww: ops.spike_bmm_train_op(s, ww), spb, kb,
+               reps=reps)
+    ref_us = _time(lambda s, ww: jnp.einsum("gmc,gck->gmk", s, ww), spb, kb,
+                   reps=reps)
+    lines.append(f"spike_bmm_attn_qk,{us:.0f},einsum={ref_us:.0f}us")
 
     xb = jax.random.normal(key, (c, k))
     g = jnp.ones((k,))

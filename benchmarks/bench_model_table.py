@@ -36,12 +36,14 @@ def rows() -> list[dict]:
 
 
 def backend_ab_rows(reps: int = 2) -> list[str]:
-    """Model-level jnp-vs-pallas A/B on the smoke Spikingformer: one BPTT
-    step (loss + grads) per backend, wall time and gradient parity vs jnp.
+    """Model-level execution-policy A/B on the smoke Spikingformer: one BPTT
+    step (loss + grads) per policy, wall time and gradient parity vs jnp,
+    preceded by each non-jnp policy's resolved per-site dispatch table
+    (``SpikingFormerConfig.describe_execution``).
 
-    On CPU the pallas column runs the kernels in interpret mode, so the
-    number demonstrates *correct wiring*, not speed; on TPU the same code
-    lowers to Mosaic and the column becomes the actual fused-kernel time.
+    On CPU the pallas columns run the kernels in interpret mode, so the
+    numbers demonstrate *correct wiring*, not speed; on TPU the same code
+    lowers to Mosaic and the columns become the actual fused-kernel times.
     """
     import time
 
@@ -49,20 +51,33 @@ def backend_ab_rows(reps: int = 2) -> list[str]:
     import jax.numpy as jnp
 
     from repro.configs.spikingformer import get_spikingformer_config
+    from repro.core.policy import named_policy
     from repro.core.spikingformer import init_spikingformer, spikingformer_loss
 
-    cfg = get_spikingformer_config("spikingformer-smoke")
+    # Pin the base to jnp: the A/B must not drift with REPRO_BACKEND.
+    cfg = get_spikingformer_config("spikingformer-smoke",
+                                   policy=named_policy("jnp"))
     params, state = init_spikingformer(jax.random.PRNGKey(0), cfg)
     imgs = jax.random.uniform(jax.random.PRNGKey(1), (2, 32, 32, 3))
     labels = jnp.arange(2) % cfg.num_classes
 
-    lines = ["backend,loss,step_ms,max_grad_diff_vs_jnp"]
+    policies = [
+        ("jnp", named_policy("jnp")),
+        ("pallas", named_policy("pallas")),
+        ("pallas+spike_mm",
+         named_policy("pallas").with_sites({"linear_bn": "pallas+spike_mm"})),
+        ("pallas-full", named_policy("pallas-full")),
+    ]
+    lines = []
+    for name, pol in policies[1:]:
+        lines += cfg.with_policy(pol).describe_execution().splitlines()
+        lines.append("")
+    lines.append("policy,loss,step_ms,max_grad_diff_vs_jnp")
     grad_fn = jax.jit(jax.value_and_grad(spikingformer_loss, has_aux=True),
                       static_argnums=4)
     base_grads = None
-    for backend, spike_mm in (("jnp", False), ("pallas", False),
-                              ("pallas", True)):
-        c = cfg.with_backend(backend, spike_mm=spike_mm)
+    for name, pol in policies:
+        c = cfg.with_policy(pol)
         (loss, _), grads = grad_fn(params, state, imgs, labels, c)  # compile
         jax.block_until_ready(grads)
         t0 = time.perf_counter()
@@ -74,7 +89,6 @@ def backend_ab_rows(reps: int = 2) -> list[str]:
         else:
             diff = max(float(jnp.max(jnp.abs(a - b))) for a, b in
                        zip(jax.tree.leaves(base_grads), jax.tree.leaves(grads)))
-        name = backend + ("+spike_mm" if spike_mm else "")
         lines.append(f"{name},{float(loss):.6f},{ms:.1f},{diff:.2e}")
     return lines
 

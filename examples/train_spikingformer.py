@@ -9,13 +9,14 @@ ln(4) chance level within ~100 steps).
 Run:  PYTHONPATH=src python examples/train_spikingformer.py [--steps 200]
 """
 import argparse
+import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.spikingformer import get_spikingformer_config
-from repro.core.backend import BACKENDS, default_backend
+from repro.core.policy import list_named_policies, named_policy
 from repro.core.spikingformer import init_spikingformer
 from repro.train.checkpoint import save_checkpoint
 from repro.train.loop import make_spikingformer_train_step
@@ -40,19 +41,24 @@ def main() -> None:
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--batch", type=int, default=16)
     ap.add_argument("--ckpt-dir", default=None)
-    ap.add_argument("--backend", choices=BACKENDS, default=default_backend(),
-                    help="kernel backend: jnp (lax.scan) or pallas (fused "
-                         "SOMA/GRAD + BN kernels; interpret mode off-TPU)")
+    ap.add_argument("--policy", choices=list_named_policies(),
+                    default=os.environ.get("REPRO_BACKEND", "jnp"),
+                    help="execution policy: jnp (lax.scan reference), "
+                         "pallas (fused SOMA/GRAD + BN kernels; interpret "
+                         "mode off-TPU) or pallas-full (adds the bit-packed "
+                         "spike matmuls and packed (QK^T)V attention)")
     ap.add_argument("--spike-mm", action="store_true",
-                    help="route Conv1DBN matmuls through the bit-packed "
-                         "spike kernel (pallas backend only)")
+                    help="deprecated: add the packed Conv1DBN matmuls to "
+                         "the chosen policy (use --policy pallas-full)")
     args = ap.parse_args()
 
-    cfg = get_spikingformer_config("spikingformer-tiny",
-                                   backend=args.backend,
-                                   spike_mm=args.spike_mm)
+    policy = named_policy(args.policy)
+    if args.spike_mm:
+        policy = policy.with_sites({"linear_bn": "pallas+spike_mm"})
+    cfg = get_spikingformer_config("spikingformer-tiny", policy=policy)
     print(f"spikingformer params: {cfg.param_count():,} "
-          f"backend={cfg.backend}")
+          f"policy={args.policy}")
+    print(cfg.describe_execution())
     params, state = init_spikingformer(jax.random.PRNGKey(0), cfg)
     opt_cfg = OptimizerConfig(lr=2e-3, warmup_steps=20,
                               total_steps=args.steps, weight_decay=0.01)

@@ -1,17 +1,30 @@
-"""Named Spikingformer presets with kernel-backend variants.
+"""Named Spikingformer presets with execution-policy variants.
 
 Mirrors :mod:`repro.configs.registry` for the paper's own model family:
 ``get_spikingformer_config("spikingformer-8-512")`` is the paper Table III
 training target; ``"spikingformer-smoke"`` is the CPU test/bench size shared
 by the parity tests and ``benchmarks/bench_model_table.py``.
 
-Backend variants are spelled ``<name>@<backend>`` (e.g.
-``spikingformer-smoke@pallas``) or requested via the ``backend=`` kwarg —
-the same parameters load under either backend.
+Execution variants are spelled ``<name>@<policy>`` with a policy preset name
+(``jnp``/``pallas``/``pallas-full``, e.g. ``spikingformer-smoke@pallas``) or
+requested via the ``policy=`` kwarg — the same parameters load under any
+policy. When neither is given, the ``REPRO_BACKEND`` environment variable
+selects the policy preset (so ``REPRO_BACKEND=pallas-full pytest`` really
+runs the full-Pallas path, it no longer silently falls back to jnp). The
+PR 1 ``backend=``/``spike_mm=``/``interpret=`` kwargs still work as
+deprecation shims.
+
+Every lookup resolves the policy against the preset's shapes once
+(:meth:`SpikingFormerConfig.execution_plan`) and logs any packed-kernel
+fallback — per-site, at config time, never silently per call.
 """
 from __future__ import annotations
 
-from repro.core.backend import validate_backend
+import os
+
+from repro.core.policy import (ExecutionPolicy, default_policy, log_fallbacks,
+                               named_policy, policy_from_flags,
+                               warn_deprecated_flags)
 from repro.core.spikingformer import SpikingFormerConfig
 
 SPIKINGFORMER_PRESETS: dict[str, SpikingFormerConfig] = {
@@ -32,16 +45,33 @@ def list_spikingformer_configs() -> list[str]:
     return sorted(SPIKINGFORMER_PRESETS)
 
 
-def get_spikingformer_config(name: str, *, backend: str | None = None,
+def get_spikingformer_config(name: str, *,
+                             policy: ExecutionPolicy | None = None,
+                             backend: str | None = None,
                              spike_mm: bool | None = None,
                              interpret: bool | None = None
                              ) -> SpikingFormerConfig:
-    """Look up a preset, optionally rebinding the execution backend."""
+    """Look up a preset, optionally rebinding the execution policy.
+
+    Precedence: explicit legacy flags (deprecated) > ``policy=`` kwarg >
+    ``@<policy>`` name suffix > ``REPRO_BACKEND`` env var > the preset's own
+    policy (jnp).
+    """
     if "@" in name:
-        name, at_backend = name.rsplit("@", 1)
-        backend = backend or at_backend
+        name, suffix = name.rsplit("@", 1)
+        if policy is None:
+            policy = named_policy(suffix)
     cfg = SPIKINGFORMER_PRESETS[name]
     if backend is not None or spike_mm is not None or interpret is not None:
-        cfg = cfg.with_backend(validate_backend(backend or cfg.backend),
-                               spike_mm=spike_mm, interpret=interpret)
+        warn_deprecated_flags(
+            "get_spikingformer_config(backend=/spike_mm=/interpret=)")
+        cfg = cfg.with_policy(policy_from_flags(
+            backend, spike_mm, interpret,
+            base=policy if policy is not None else cfg.policy))
+    elif policy is not None:
+        cfg = cfg.with_policy(policy)
+    elif os.environ.get("REPRO_BACKEND"):
+        cfg = cfg.with_policy(default_policy())
+    # Resolve packing constraints per site once, here — and report them.
+    log_fallbacks(cfg.execution_plan())
     return cfg

@@ -1,3 +1,9 @@
 # The paper's primary contribution — implement the SYSTEM here
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
+#
+# Execution is governed by repro.core.policy: re-export the public policy
+# surface so `from repro.core import ExecutionPolicy` works.
+from repro.core.policy import (ExecutionPolicy, default_policy,  # noqa: F401
+                               get_kernel, list_named_policies, named_policy,
+                               register_kernel)

@@ -40,8 +40,18 @@ def validate_backend(backend: str) -> str:
 def default_backend() -> str:
     """The process-wide default backend, read live from the environment so
     quick A/Bs work (``REPRO_BACKEND=pallas python examples/...``) even when
-    the variable is set after this module was first imported."""
-    return validate_backend(os.environ.get("REPRO_BACKEND", "jnp"))
+    the variable is set after this module was first imported.
+
+    ``REPRO_BACKEND`` may also name a policy preset (e.g. ``pallas-full``);
+    the preset's backend is returned here, and the full policy is applied by
+    :func:`repro.core.policy.default_policy` /
+    ``repro.configs.spikingformer.get_spikingformer_config``.
+    """
+    name = os.environ.get("REPRO_BACKEND", "jnp")
+    if name in BACKENDS:
+        return name
+    from repro.core.policy import named_policy  # deferred: avoid cycle
+    return named_policy(name).backend
 
 
 def resolve_interpret(interpret: bool | None) -> bool:

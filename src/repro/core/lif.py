@@ -14,10 +14,12 @@ non-differentiable Heaviside is given a rectangular surrogate:
 The reset path is kept *attached* (not detached), so the -alpha*U_t term of the
 paper's \nabla S_t recursion is present in the VJP, exactly matching eq. 12.
 
-``LIFConfig.backend`` selects the execution backend for ``lif_scan``:
-``"jnp"`` is the pure ``lax.scan`` above; ``"pallas"`` folds the input to
-(T, M, D) and runs the fused SOMA/GRAD kernel pair
-(``repro.kernels.ops.lif_soma_op``) whose custom VJP *is* eq. 12.
+``LIFConfig.policy`` (an :class:`repro.core.policy.ExecutionPolicy`) selects
+the execution path for ``lif_scan`` through the kernel registry: the
+``"jnp"`` implementation is the pure ``lax.scan`` above; ``"pallas"`` folds
+the input to (T, M, D) and runs the fused SOMA/GRAD kernel pair
+(``repro.kernels.ops.lif_soma_op``) whose custom VJP *is* eq. 12. The PR 1
+``backend=``/``interpret=`` kwargs still work as deprecation shims.
 """
 from __future__ import annotations
 
@@ -27,28 +29,37 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core.backend import validate_backend
+from repro.core.policy import (ExecutionPolicy, apply_legacy_exec_flags,
+                               get_kernel, policy_from_flags, register_kernel,
+                               warn_deprecated_flags)
 
 
 @dataclasses.dataclass(frozen=True)
 class LIFConfig:
-    """LIF neuron hyper-parameters (paper defaults)."""
+    """LIF neuron hyper-parameters (paper defaults) + execution policy."""
 
     alpha: float = 0.5          # leakage factor (1 - 1/tau with tau=2)
     th_fire: float = 1.0        # firing threshold th_f
     th_lo: float = 0.0          # surrogate window lower bound  (paper: th_f < U < th_r
     th_hi: float = 2.0          #   one-sided; we centre the window on th_f)
     grad_scale: float = 1.0     # surrogate magnitude inside the window
-    backend: str = "jnp"        # "jnp" (lax.scan) | "pallas" (fused SOMA/GRAD)
-    interpret: bool | None = None  # Pallas interpret override (None = auto)
+    policy: ExecutionPolicy = ExecutionPolicy()
+    # Deprecated PR 1 spellings, folded into ``policy`` with a warning:
+    backend: dataclasses.InitVar[str | None] = None
+    interpret: dataclasses.InitVar[bool | None] = None
+
+    def __post_init__(self, backend, interpret):
+        apply_legacy_exec_flags(self, backend, None, interpret)
+
+    def with_policy(self, policy: ExecutionPolicy) -> "LIFConfig":
+        return dataclasses.replace(self, policy=policy)
 
     def with_backend(self, backend: str,
                      interpret: bool | None = None) -> "LIFConfig":
-        """Rebind the backend; ``interpret=None`` keeps the current value."""
-        if interpret is None:
-            interpret = self.interpret
-        return dataclasses.replace(self, backend=validate_backend(backend),
-                                   interpret=interpret)
+        """Deprecated: use ``with_policy(ExecutionPolicy(...))``."""
+        warn_deprecated_flags("LIFConfig.with_backend()")
+        return self.with_policy(policy_from_flags(backend, None, interpret,
+                                                  base=self.policy))
 
 
 @jax.custom_vjp
@@ -89,31 +100,9 @@ def lif_step(u_prev: jax.Array, s_prev: jax.Array, x: jax.Array,
     return u, s
 
 
-def _lif_scan_pallas(x_seq: jax.Array, cfg: LIFConfig) -> jax.Array:
-    """Fused-kernel dispatch: fold (T, ..., D) -> (T, M, D), run the SOMA op
-    (GRAD kernel in the VJP), and unfold. LIF is elementwise over the folded
-    axes so the reshape is exact."""
-    from repro.core.backend import fold_time_major
-    from repro.kernels import ops  # deferred: keep the jnp path import-light
-
-    x3, shape = fold_time_major(x_seq)
-    s = ops.lif_soma_op(x3, cfg.alpha, cfg.th_fire, cfg.th_lo, cfg.th_hi,
-                        cfg.grad_scale, cfg.interpret)
-    return s.reshape(shape)
-
-
-@partial(jax.jit, static_argnames=("cfg",))
-def lif_scan(x_seq: jax.Array, cfg: LIFConfig) -> jax.Array:
-    """Multi-step LIF over the leading time axis.
-
-    x_seq: (T, ...) membrane input currents (post-BN, per eq. 11).
-    Returns spikes (T, ...) with the same dtype. State starts at rest (0).
-    This is the BPTT-differentiable SOMA module; ``jax.grad`` through it
-    reproduces the GRAD recursion of eq. 12 — on the ``"pallas"`` backend
-    the recursion runs as the fused GRAD kernel itself.
-    """
-    if cfg.backend == "pallas" and x_seq.ndim >= 2:
-        return _lif_scan_pallas(x_seq, cfg)
+@register_kernel("lif", "jnp")
+def _lif_scan_jnp(x_seq: jax.Array, cfg: LIFConfig, site: str) -> jax.Array:
+    """Reference implementation: ``lax.scan`` + surrogate autodiff."""
     u0 = jnp.zeros_like(x_seq[0])
     s0 = jnp.zeros_like(x_seq[0])
 
@@ -124,6 +113,42 @@ def lif_scan(x_seq: jax.Array, cfg: LIFConfig) -> jax.Array:
 
     (_, _), spikes = jax.lax.scan(step, (u0, s0), x_seq)
     return spikes
+
+
+@register_kernel("lif", "pallas")
+def _lif_scan_pallas(x_seq: jax.Array, cfg: LIFConfig, site: str) -> jax.Array:
+    """Fused-kernel dispatch: fold (T, ..., D) -> (T, M, D), run the SOMA op
+    (GRAD kernel in the VJP), and unfold. LIF is elementwise over the folded
+    axes so the reshape is exact."""
+    from repro.core.backend import fold_time_major
+    from repro.kernels import ops  # deferred: keep the jnp path import-light
+
+    if x_seq.ndim < 2:   # the kernel needs a (T, M, D)-foldable input
+        from repro.core.policy import runtime_fallback
+        runtime_fallback(site, "pallas",
+                         f"input ndim {x_seq.ndim} < 2 -> jnp scan")
+        return _lif_scan_jnp(x_seq, cfg, site)
+    x3, shape = fold_time_major(x_seq)
+    s = ops.lif_soma_op(x3, cfg.alpha, cfg.th_fire, cfg.th_lo, cfg.th_hi,
+                        cfg.grad_scale, cfg.policy.interpret)
+    return s.reshape(shape)
+
+
+@partial(jax.jit, static_argnames=("cfg", "site"))
+def lif_scan(x_seq: jax.Array, cfg: LIFConfig, site: str = "lif") -> jax.Array:
+    """Multi-step LIF over the leading time axis.
+
+    x_seq: (T, ...) membrane input currents (post-BN, per eq. 11).
+    Returns spikes (T, ...) with the same dtype. State starts at rest (0).
+    This is the BPTT-differentiable SOMA module; ``jax.grad`` through it
+    reproduces the GRAD recursion of eq. 12 — under a ``"pallas"``-backed
+    policy the recursion runs as the fused GRAD kernel itself.
+
+    ``site`` names this call site for per-site policy overrides (the model
+    passes ``"tokenizer.lif"``/``"pssa.lif"``/``"smlp.lif"``).
+    """
+    impl = cfg.policy.resolve(site, "lif")
+    return get_kernel("lif", impl)(x_seq, cfg, site)
 
 
 @partial(jax.jit, static_argnames=("cfg",))

@@ -1,0 +1,368 @@
+"""Execution policy + per-site kernel registry for the Spikingformer stack.
+
+PR 1 threaded a flat ``backend``/``spike_mm``/``interpret`` triple through
+every config and ``*_apply`` kwarg list. That cannot express "packed spike
+matmul at the MLP sites but dense at the tokenizer" or "route the attention
+einsums through the packed kernel" — so this module replaces the triple with
+two pieces:
+
+* :class:`ExecutionPolicy` — a frozen, hashable value (safe as a static jit
+  argument) holding a default ``backend``, the Pallas ``interpret`` override,
+  and a canonical tuple of per-site implementation overrides, e.g.::
+
+      ExecutionPolicy(backend="pallas",
+                      overrides={"pssa.qkv": "pallas+spike_mm",
+                                 "attn_qk": "pallas_packed",
+                                 "tokenizer.bn": "jnp"})
+
+* a **kernel registry** keyed ``(op, impl)``. Ops are the abstract sites the
+  model dispatches through (``lif``, ``bn``, ``linear_bn``, ``attn_qk``,
+  ``attn_av``, ``conv``); impls are named implementations registered with
+  :func:`register_kernel`. ``lif_scan`` / ``bn_apply`` / ``linear_bn_apply``
+  / ``pssa_apply`` resolve through :meth:`ExecutionPolicy.resolve` instead of
+  branching on booleans, so third parties can register new implementations
+  (see ``docs/EXECUTION.md``) and A/B them per site.
+
+Resolution precedence for ``resolve(site, op)``:
+
+1. an override keyed by the exact *site* name (``"pssa.qkv"``),
+2. an override keyed by the *op* name (``"linear_bn"``),
+3. the backend's default implementation for the op.
+
+Packing constraints (the bit-packed spike kernels need their contraction
+dim to be a multiple of 8) are resolved **once, at policy-validation time**
+via :func:`plan_sites` — which reports the effective implementation per site
+— instead of silently falling back per call.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import os
+import warnings
+from typing import Any, Callable, Iterable, Mapping, Sequence
+
+from repro.core.backend import BACKENDS, validate_backend
+
+logger = logging.getLogger("repro.execution")
+
+#: The abstract op kinds the model dispatches through (a *site* is a named
+#: instance of one of these, e.g. site "pssa.qkv" has op "linear_bn").
+OPS: tuple[str, ...] = ("lif", "bn", "linear_bn", "attn_qk", "attn_av",
+                        "conv")
+
+# Per-backend default implementation for each op. The attention einsums and
+# the tokenizer conv stay on jnp even under backend="pallas" (packed
+# attention is opt-in via the "pallas-full" policy until TPU-soaked, and the
+# fused tokenizer conv is an open ROADMAP item).
+_DEFAULT_IMPL: dict[tuple[str, str], str] = {
+    ("lif", "jnp"): "jnp", ("lif", "pallas"): "pallas",
+    ("bn", "jnp"): "jnp", ("bn", "pallas"): "pallas",
+    ("linear_bn", "jnp"): "jnp", ("linear_bn", "pallas"): "pallas",
+    ("attn_qk", "jnp"): "jnp", ("attn_qk", "pallas"): "jnp",
+    ("attn_av", "jnp"): "jnp", ("attn_av", "pallas"): "jnp",
+    ("conv", "jnp"): "jnp", ("conv", "pallas"): "jnp",
+}
+
+#: impl -> fallback impl used when a site's packing constraint
+#: (contraction dim % 8 == 0) cannot be met.
+PACKED_IMPL_FALLBACK: dict[str, str] = {
+    "pallas+spike_mm": "pallas",   # dense matmul + fused BN
+    "pallas_packed": "jnp",        # plain einsum
+}
+
+
+def default_impl(op: str, backend: str) -> str:
+    try:
+        return _DEFAULT_IMPL[(op, validate_backend(backend))]
+    except KeyError:
+        raise ValueError(f"unknown op {op!r}; expected one of {OPS}") from None
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPolicy:
+    """Hashable execution policy: default backend + per-site overrides.
+
+    ``overrides`` accepts a mapping or an iterable of ``(key, impl)`` pairs
+    (keys are site names or op names) and is canonicalized to a sorted tuple
+    so equal policies compare and hash equal — policies are static jit
+    arguments and must never retrace when logically unchanged.
+    """
+
+    backend: str = "jnp"
+    interpret: bool | None = None
+    overrides: tuple[tuple[str, str], ...] = ()
+
+    def __post_init__(self):
+        validate_backend(self.backend)
+        ov = self.overrides
+        if isinstance(ov, Mapping):
+            ov = ov.items()
+        object.__setattr__(
+            self, "overrides",
+            tuple(sorted((str(k), str(v)) for k, v in ov)))
+
+    def resolve(self, site: str, op: str) -> str:
+        """Implementation name for ``site`` (an instance of ``op``)."""
+        ov = dict(self.overrides)
+        impl = ov.get(site)
+        if impl is None:
+            impl = ov.get(op)
+        if impl is None:
+            impl = default_impl(op, self.backend)
+        return impl
+
+    def with_sites(self, sites: Mapping[str, str | None]) -> "ExecutionPolicy":
+        """New policy with ``sites`` merged in (``None`` removes a key)."""
+        ov = dict(self.overrides)
+        for k, v in sites.items():
+            if v is None:
+                ov.pop(k, None)
+            else:
+                ov[k] = v
+        return dataclasses.replace(self, overrides=tuple(ov.items()))
+
+    def describe(self, site_specs: Sequence[tuple[str, str, int | None]]
+                 | None = None) -> str:
+        """Human-readable per-site dispatch table.
+
+        Without ``site_specs`` the table shows the op-level defaults plus
+        any overrides; with specs (``(site, op, pack_dim)`` triples, e.g.
+        from ``repro.core.spikingformer.execution_site_specs``) it shows the
+        *effective* implementation per model site, including packing
+        fallbacks.
+        """
+        if site_specs is None:
+            site_specs = [(op, op, None) for op in OPS]
+        rows = plan_sites(self, site_specs, check_registry=False)
+        header = f"# ExecutionPolicy backend={self.backend} " \
+                 f"interpret={self.interpret}"
+        lines = [header, "site,op,requested,effective,note"]
+        for r in rows:
+            lines.append(f"{r.site},{r.op},{r.requested},{r.effective},"
+                         f"{r.note}")
+        return "\n".join(lines)
+
+
+@dataclasses.dataclass(frozen=True)
+class SiteDecision:
+    """One row of a resolved execution plan."""
+
+    site: str
+    op: str
+    requested: str
+    effective: str
+    note: str = ""
+
+
+def plan_sites(policy: ExecutionPolicy,
+               site_specs: Sequence[tuple[str, str, int | None]],
+               *, check_registry: bool = True) -> list[SiteDecision]:
+    """Resolve every site once and report packing fallbacks.
+
+    ``site_specs`` is a sequence of ``(site, op, pack_dim)``: ``pack_dim``
+    is the contraction dimension a bit-packed implementation would pack
+    (``None`` when the op has no packing constraint). A packed impl whose
+    ``pack_dim % 8 != 0`` is resolved to its dense fallback *here* — the
+    per-call path then only logs if it ever still disagrees (it should not).
+
+    With ``check_registry=True`` every effective implementation must exist
+    in the registry, and every override key must match one of the planned
+    sites or a known op name — so a typo'd impl *or* a typo'd site fails at
+    policy-validation time rather than silently doing nothing.
+    """
+    rows = []
+    for site, op, dim in site_specs:
+        requested = policy.resolve(site, op)
+        effective, note = requested, ""
+        if requested in PACKED_IMPL_FALLBACK and dim is not None \
+                and dim % 8 != 0:
+            effective = PACKED_IMPL_FALLBACK[requested]
+            note = (f"pack dim {dim} % 8 != 0 -> {effective}")
+        if check_registry:
+            get_kernel(op, effective)   # raises on unknown impl
+        rows.append(SiteDecision(site, op, requested, effective, note))
+    if check_registry:
+        known = {s for s, _, _ in site_specs} | set(OPS)
+        unmatched = [k for k, _ in policy.overrides if k not in known]
+        if unmatched:
+            raise ValueError(
+                f"policy overrides {unmatched} match no site or op; "
+                f"sites: {sorted(known - set(OPS))}, ops: {OPS}")
+    return rows
+
+
+_reported_fallbacks: set[tuple[str, str]] = set()
+
+
+def log_fallbacks(rows: Iterable[SiteDecision]) -> None:
+    """Report (once per site+note) every site whose requested impl was
+    replaced by its dense fallback at validation time."""
+    for r in rows:
+        if r.note and (r.site, r.note) not in _reported_fallbacks:
+            _reported_fallbacks.add((r.site, r.note))
+            logger.warning("execution policy: site %s requested %r but %s",
+                           r.site, r.requested, r.note)
+
+
+def runtime_fallback(site: str, impl: str, reason: str) -> None:
+    """Log (once per site+reason) a per-call fallback that validation did
+    not predict — e.g. a layer called directly with an odd shape."""
+    key = (site, reason)
+    if key not in _reported_fallbacks:
+        _reported_fallbacks.add(key)
+        logger.warning("execution policy: site %s impl %r fell back at call "
+                       "time: %s", site, impl, reason)
+
+
+# ---------------------------------------------------------------------------
+# Kernel registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[tuple[str, str], Callable[..., Any]] = {}
+
+
+def register_kernel(op: str, impl: str) -> Callable:
+    """Decorator: register ``fn`` as the ``impl`` implementation of ``op``.
+
+    Signatures by op (``policy``/``site`` always ride along so nested ops
+    can resolve through the same policy):
+
+    * ``lif``:       ``fn(x_seq, cfg: LIFConfig, site) -> spikes``
+    * ``bn``:        ``fn(params, state, x, train, momentum, eps, policy,
+                      site) -> (y, state)``
+    * ``linear_bn``: ``fn(params, state, x, train, policy, site)
+                      -> (y, state)``
+    * ``attn_qk``:   ``fn(q, k, policy, site) -> attn``  (T,B,h,N,M)
+    * ``attn_av``:   ``fn(attn, v, policy, site) -> out`` (T,B,h,N,dh)
+    * ``conv``:      ``fn(params, x, policy, site) -> y``
+    """
+    def deco(fn: Callable) -> Callable:
+        _REGISTRY[(op, impl)] = fn
+        return fn
+    return deco
+
+
+def unregister_kernel(op: str, impl: str) -> None:
+    _REGISTRY.pop((op, impl), None)
+
+
+def available_impls(op: str) -> tuple[str, ...]:
+    _ensure_builtins()
+    return tuple(sorted(i for (o, i) in _REGISTRY if o == op))
+
+
+def get_kernel(op: str, impl: str) -> Callable[..., Any]:
+    """Look up the registered implementation, importing the builtins first."""
+    _ensure_builtins()
+    try:
+        return _REGISTRY[(op, impl)]
+    except KeyError:
+        raise KeyError(
+            f"no implementation {impl!r} registered for op {op!r}; "
+            f"available: {available_impls(op)}") from None
+
+
+def _ensure_builtins() -> None:
+    # The builtin implementations register themselves at import time; pull
+    # them in lazily so policy.py never imports the model modules at load
+    # (they import *us*).
+    import repro.core.spikingformer  # noqa: F401  (imports lif + layers too)
+
+
+# ---------------------------------------------------------------------------
+# Named policies + environment default
+# ---------------------------------------------------------------------------
+
+#: Everything-on policy: fused LIF/BN kernels, packed spike matmul at every
+#: Conv1DBN site, and the packed (QK^T)V attention path.
+_PALLAS_FULL = ExecutionPolicy(
+    backend="pallas",
+    overrides=(("attn_av", "pallas_packed"), ("attn_qk", "pallas_packed"),
+               ("linear_bn", "pallas+spike_mm")))
+
+NAMED_POLICIES: dict[str, ExecutionPolicy] = {
+    "jnp": ExecutionPolicy(),
+    "pallas": ExecutionPolicy(backend="pallas"),
+    "pallas-full": _PALLAS_FULL,
+}
+
+
+def list_named_policies() -> list[str]:
+    return sorted(NAMED_POLICIES)
+
+
+def named_policy(name: str) -> ExecutionPolicy:
+    """Resolve a policy preset name (``jnp``/``pallas``/``pallas-full``)."""
+    try:
+        return NAMED_POLICIES[name]
+    except KeyError:
+        raise ValueError(f"unknown policy {name!r}; expected one of "
+                         f"{list_named_policies()}") from None
+
+
+def default_policy() -> ExecutionPolicy:
+    """Process-wide default policy, read live from ``REPRO_BACKEND`` so
+    ``REPRO_BACKEND=pallas-full pytest`` (or an example run) exercises the
+    non-default path without code changes."""
+    return named_policy(os.environ.get("REPRO_BACKEND", "jnp"))
+
+
+# ---------------------------------------------------------------------------
+# Legacy-flag shims (PR 1 spellings)
+# ---------------------------------------------------------------------------
+
+#: Implementations that only exist under the pallas backend — the legacy
+#: shim must drop these when bridging to backend="jnp" (under PR 1
+#: semantics, backend="jnp" ran the dense jnp path regardless of spike_mm).
+_PALLAS_ONLY_IMPLS = frozenset({"pallas", "pallas+spike_mm", "pallas_packed"})
+
+
+def policy_from_flags(backend: str | None = None,
+                      spike_mm: bool | None = None,
+                      interpret: bool | None = None,
+                      base: ExecutionPolicy | None = None) -> ExecutionPolicy:
+    """Translate the PR 1 ``backend``/``spike_mm``/``interpret`` triple into
+    a policy, layered over ``base`` (``None`` keeps the base's value)."""
+    base = base if base is not None else ExecutionPolicy()
+    ov = dict(base.overrides)
+    if spike_mm is True:
+        ov["linear_bn"] = "pallas+spike_mm"
+    elif spike_mm is False:
+        ov.pop("linear_bn", None)
+    new_backend = (validate_backend(backend) if backend is not None
+                   else base.backend)
+    if new_backend == "jnp":
+        ov = {k: v for k, v in ov.items() if v not in _PALLAS_ONLY_IMPLS}
+    return ExecutionPolicy(
+        backend=new_backend,
+        interpret=interpret if interpret is not None else base.interpret,
+        overrides=tuple(ov.items()))
+
+
+def warn_deprecated_flags(what: str) -> None:
+    warnings.warn(
+        f"{what} is deprecated; pass policy=ExecutionPolicy(...) "
+        f"(see docs/EXECUTION.md)", DeprecationWarning, stacklevel=3)
+
+
+def apply_legacy_exec_flags(cfg: Any, backend: str | None,
+                            spike_mm: bool | None,
+                            interpret: bool | None) -> None:
+    """``__post_init__`` helper for frozen configs that still accept the
+    PR 1 kwargs: folds them into ``cfg.policy`` with a DeprecationWarning."""
+    if backend is None and spike_mm is None and interpret is None:
+        return
+    warn_deprecated_flags(
+        f"{type(cfg).__name__}(backend=/spike_mm=/interpret=)")
+    object.__setattr__(cfg, "policy", policy_from_flags(
+        backend, spike_mm, interpret, base=cfg.policy))
+
+
+__all__ = [
+    "BACKENDS", "ExecutionPolicy", "NAMED_POLICIES", "OPS", "SiteDecision",
+    "apply_legacy_exec_flags", "available_impls", "default_impl",
+    "default_policy", "get_kernel", "list_named_policies", "log_fallbacks",
+    "named_policy", "plan_sites", "policy_from_flags", "register_kernel",
+    "runtime_fallback", "unregister_kernel", "warn_deprecated_flags",
+]

@@ -9,6 +9,12 @@ Conventions
   running statistics only.
 * ``Conv1D == MM`` (paper §III-A): the Q/K/V/Z/A/B "Conv1DBN" layers are plain
   linear transforms followed by BatchNorm.
+* Execution dispatches through the :mod:`repro.core.policy` kernel registry:
+  each ``*_apply`` resolves its implementation from an
+  :class:`~repro.core.policy.ExecutionPolicy` and a ``site`` name
+  (``"pssa.qkv"``, ``"smlp.a"``, ``"attn_qk"``, ...) instead of branching on
+  the PR 1 ``backend``/``spike_mm`` booleans. The old kwargs still work as
+  deprecation shims.
 """
 from __future__ import annotations
 
@@ -20,9 +26,24 @@ import jax.numpy as jnp
 
 from repro.core.backend import fold_rows
 from repro.core.lif import LIFConfig, lif_scan
+from repro.core.policy import (ExecutionPolicy, apply_legacy_exec_flags,
+                               get_kernel, policy_from_flags, register_kernel,
+                               runtime_fallback)
 
 Params = dict[str, Any]
 State = dict[str, Any]
+
+
+def _legacy_policy(policy: ExecutionPolicy | None, backend: str | None,
+                   spike_mm: bool | None, interpret: bool | None,
+                   what: str) -> ExecutionPolicy:
+    """Fold deprecated per-call flags into a policy (warning when used)."""
+    if backend is not None or spike_mm is not None or interpret is not None:
+        from repro.core.policy import warn_deprecated_flags
+        warn_deprecated_flags(what)
+        return policy_from_flags(backend, spike_mm, interpret,
+                                 base=policy or ExecutionPolicy())
+    return policy if policy is not None else ExecutionPolicy()
 
 
 # ---------------------------------------------------------------------------
@@ -36,28 +57,10 @@ def init_bn(dim: int, dtype=jnp.float32) -> tuple[Params, State]:
     return params, state
 
 
-def bn_apply(params: Params, state: State, x: jax.Array, *, train: bool,
-             momentum: float = 0.9, eps: float = 1e-5, backend: str = "jnp",
-             interpret: bool | None = None):
-    """BatchNorm over all axes but the last (features d), following the
-    paper's E[x^2] - mu^2 formulation (eq. 14-15). Statistics in fp32.
-
-    ``backend="pallas"`` routes the training path through the fused BN
-    FP/BP kernel pair (``ops.bn_train_op``, eq. 13-23): one VMEM visit
-    computes stats and normalizes; the batch mu/var the kernel already
-    computed are blended into the running stats (no second pass over x).
-    Eval always uses the running-stat jnp path.
-    """
-    if train and backend == "pallas":
-        from repro.kernels import ops
-
-        x2, shape = fold_rows(x)
-        y, mu, var = ops.bn_train_op(x2, params["gamma"], params["beta"],
-                                     eps, interpret)
-        var = jnp.maximum(var, 0.0)   # sqrt_d^2 - eps can round below zero
-        new_state = {"mean": momentum * state["mean"] + (1 - momentum) * mu,
-                     "var": momentum * state["var"] + (1 - momentum) * var}
-        return y.reshape(shape), new_state
+@register_kernel("bn", "jnp")
+def _bn_jnp(params, state, x, train, momentum, eps, policy, site):
+    """Pure-jnp BatchNorm, the paper's E[x^2] - mu^2 formulation (eq. 13-18);
+    statistics in fp32. Also the eval path for every implementation."""
     axes = tuple(range(x.ndim - 1))
     if train:
         xf = x.astype(jnp.float32)
@@ -73,6 +76,42 @@ def bn_apply(params: Params, state: State, x: jax.Array, *, train: bool,
     y = (x - mu.astype(x.dtype)) / sqrt_d.astype(x.dtype)      # eq. 17
     y = params["gamma"] * y + params["beta"]                   # eq. 18
     return y, new_state
+
+
+@register_kernel("bn", "pallas")
+def _bn_pallas(params, state, x, train, momentum, eps, policy, site):
+    """Fused BN FP/BP kernel pair (``ops.bn_train_op``, eq. 13-23): one VMEM
+    visit computes stats and normalizes; the batch mu/var the kernel already
+    computed are blended into the running stats (no second pass over x).
+    Eval always uses the running-stat jnp path."""
+    if not train:
+        return _bn_jnp(params, state, x, train, momentum, eps, policy, site)
+    from repro.kernels import ops
+
+    x2, shape = fold_rows(x)
+    y, mu, var = ops.bn_train_op(x2, params["gamma"], params["beta"],
+                                 eps, policy.interpret)
+    var = jnp.maximum(var, 0.0)   # sqrt_d^2 - eps can round below zero
+    new_state = {"mean": momentum * state["mean"] + (1 - momentum) * mu,
+                 "var": momentum * state["var"] + (1 - momentum) * var}
+    return y.reshape(shape), new_state
+
+
+def bn_apply(params: Params, state: State, x: jax.Array, *, train: bool,
+             momentum: float = 0.9, eps: float = 1e-5,
+             policy: ExecutionPolicy | None = None, site: str = "bn",
+             backend: str | None = None, interpret: bool | None = None):
+    """BatchNorm over all axes but the last (features d).
+
+    The implementation is resolved through the kernel registry from
+    ``policy`` and ``site`` (``backend=``/``interpret=`` are deprecated
+    shims). Statistics are fp32 under every implementation.
+    """
+    policy = _legacy_policy(policy, backend, None, interpret,
+                            "bn_apply(backend=/interpret=)")
+    impl = policy.resolve(site, "bn")
+    return get_kernel("bn", impl)(params, state, x, train, momentum, eps,
+                                  policy, site)
 
 
 # ---------------------------------------------------------------------------
@@ -96,28 +135,128 @@ def init_linear_bn(key, d_in: int, d_out: int, dtype=jnp.float32):
     return {"linear": params, "bn": bn_p}, {"bn": bn_s}
 
 
-def linear_bn_apply(params: Params, state: State, x: jax.Array, *, train: bool,
-                    backend: str = "jnp", spike_mm: bool = False,
-                    interpret: bool | None = None):
-    """The paper's Conv1DBN: spike (or real) input -> MM -> BN.
+@register_kernel("linear_bn", "jnp")
+def _linear_bn_jnp(params, state, x, train, policy, site):
+    """Dense matmul + jnp BatchNorm."""
+    y = linear_apply(params["linear"], x)
+    y, bn_s = _bn_jnp(params["bn"], state["bn"], y, train, 0.9, 1e-5,
+                      policy, site)
+    return y, {"bn": bn_s}
 
-    With ``backend="pallas"`` and ``spike_mm=True`` the matmul runs as the
-    bit-packed spike kernel (inputs must be {0,1} spikes — true at every
-    Conv1DBN site in PSSA/SMLP, which all consume LIF outputs). Falls back
-    to the dense path when the contraction dim is not a multiple of 8.
+
+@register_kernel("linear_bn", "pallas")
+def _linear_bn_pallas(params, state, x, train, policy, site):
+    """Dense matmul + fused-Pallas BatchNorm."""
+    y = linear_apply(params["linear"], x)
+    y, bn_s = _bn_pallas(params["bn"], state["bn"], y, train, 0.9, 1e-5,
+                         policy, site)
+    return y, {"bn": bn_s}
+
+
+@register_kernel("linear_bn", "pallas+spike_mm")
+def _linear_bn_spike_mm(params, state, x, train, policy, site):
+    """Bit-packed spike matmul + fused-Pallas BatchNorm.
+
+    Inputs must be {0,1} spikes — true at every Conv1DBN site in PSSA/SMLP,
+    which all consume LIF outputs. The packing constraint (contraction dim
+    % 8 == 0) is resolved per site at policy-validation time
+    (:func:`repro.core.policy.plan_sites`); if a direct call still violates
+    it, the dense path is used and the fallback is *logged*, not silent.
     """
     w = params["linear"]["w"]
-    if (backend == "pallas" and spike_mm and x.shape[-1] % 8 == 0):
+    if x.shape[-1] % 8 == 0:
         from repro.kernels import ops
 
         x2, shape = fold_rows(x)
-        y = ops.spike_matmul_train_op(x2, w.astype(x.dtype), interpret)
+        y = ops.spike_matmul_train_op(x2, w.astype(x.dtype), policy.interpret)
         y = y.reshape(*shape[:-1], w.shape[-1])
     else:
+        runtime_fallback(site, "pallas+spike_mm",
+                         f"contraction dim {x.shape[-1]} % 8 != 0 -> dense")
         y = linear_apply(params["linear"], x)
-    y, bn_s = bn_apply(params["bn"], state["bn"], y, train=train,
-                       backend=backend, interpret=interpret)
+    y, bn_s = _bn_pallas(params["bn"], state["bn"], y, train, 0.9, 1e-5,
+                         policy, site)
     return y, {"bn": bn_s}
+
+
+def linear_bn_apply(params: Params, state: State, x: jax.Array, *,
+                    train: bool, policy: ExecutionPolicy | None = None,
+                    site: str = "linear_bn", backend: str | None = None,
+                    spike_mm: bool | None = None,
+                    interpret: bool | None = None):
+    """The paper's Conv1DBN: spike (or real) input -> MM -> BN.
+
+    Registered implementations: ``"jnp"`` (dense + jnp BN), ``"pallas"``
+    (dense + fused BN), ``"pallas+spike_mm"`` (bit-packed spike matmul +
+    fused BN). ``backend=``/``spike_mm=``/``interpret=`` are deprecated
+    shims over ``policy``.
+    """
+    policy = _legacy_policy(policy, backend, spike_mm, interpret,
+                            "linear_bn_apply(backend=/spike_mm=/interpret=)")
+    impl = policy.resolve(site, "linear_bn")
+    return get_kernel("linear_bn", impl)(params, state, x, train, policy,
+                                         site)
+
+
+# ---------------------------------------------------------------------------
+# Attention einsums (the PSSA (QK^T)V path), registry ops attn_qk / attn_av
+# ---------------------------------------------------------------------------
+
+@register_kernel("attn_qk", "jnp")
+def _attn_qk_jnp(q, k, policy, site):
+    """Spike-count scores: (T,B,h,N,dh) x (T,B,h,M,dh) -> (T,B,h,N,M)."""
+    return jnp.einsum("tbhnd,tbhmd->tbhnm", q, k)
+
+
+@register_kernel("attn_qk", "pallas_packed")
+def _attn_qk_packed(q, k, policy, site):
+    """Packed Q K^T: Q rides HBM->VMEM at 1 bit/element.
+
+    Both operands are {0,1} LIF outputs; fold (T,B,h) to a batch axis and
+    run the batched bit-packed kernel with K^T as the dense-side operand.
+    The packing constraint is the head dim (contraction) % 8.
+    """
+    t, b, h, n, dh = q.shape
+    m = k.shape[3]
+    if dh % 8 != 0:
+        runtime_fallback(site, "pallas_packed",
+                         f"head dim {dh} % 8 != 0 -> jnp einsum")
+        return _attn_qk_jnp(q, k, policy, site)
+    from repro.kernels import ops
+
+    out = ops.spike_bmm_train_op(q.reshape(t * b * h, n, dh),
+                                 k.reshape(t * b * h, m, dh).transpose(0, 2, 1),
+                                 policy.interpret)
+    return out.reshape(t, b, h, n, m)
+
+
+@register_kernel("attn_av", "jnp")
+def _attn_av_jnp(attn, v, policy, site):
+    """(T,B,h,N,M) scores x (T,B,h,M,dh) spike values -> (T,B,h,N,dh)."""
+    return jnp.einsum("tbhnm,tbhmd->tbhnd", attn, v)
+
+
+@register_kernel("attn_av", "pallas_packed")
+def _attn_av_packed(attn, v, policy, site):
+    """Packed (attn) V via the transpose trick.
+
+    The spike operand here is V, which sits on the *right* of the matmul;
+    the kernel packs its left operand, so compute out^T = V^T attn^T with
+    V^T (dh, M) as the packed {0,1} side. The packing constraint is the
+    token count M (contraction) % 8.
+    """
+    t, b, h, n, m = attn.shape
+    dh = v.shape[-1]
+    if m % 8 != 0:
+        runtime_fallback(site, "pallas_packed",
+                         f"token count {m} % 8 != 0 -> jnp einsum")
+        return _attn_av_jnp(attn, v, policy, site)
+    from repro.kernels import ops
+
+    vt = v.reshape(t * b * h, m, dh).transpose(0, 2, 1)       # (G, dh, M) {0,1}
+    at = attn.reshape(t * b * h, n, m).transpose(0, 2, 1)     # (G, M, N)
+    out_t = ops.spike_bmm_train_op(vt, at, policy.interpret)  # (G, dh, N)
+    return out_t.transpose(0, 2, 1).reshape(t, b, h, n, dh)
 
 
 # ---------------------------------------------------------------------------
@@ -135,15 +274,19 @@ class PSSAConfig:
     # False: Q (K^T V) — algebraically identical (no softmax!), O(S d^2);
     #        this is the beyond-paper TPU optimization (see DESIGN.md §3).
     qk_first: bool = True
-    backend: str = "jnp"        # kernel backend for LIF/BN/matmul sites
-    spike_mm: bool = False      # route Conv1DBN matmuls via the packed kernel
-    interpret: bool | None = None
+    policy: ExecutionPolicy = ExecutionPolicy()
+    # Deprecated PR 1 spellings, folded into ``policy`` with a warning:
+    backend: dataclasses.InitVar[str | None] = None
+    spike_mm: dataclasses.InitVar[bool | None] = None
+    interpret: dataclasses.InitVar[bool | None] = None
+
+    def __post_init__(self, backend, spike_mm, interpret):
+        apply_legacy_exec_flags(self, backend, spike_mm, interpret)
 
     @property
     def lif_cfg(self) -> LIFConfig:
-        """The LIF config with this layer's backend injected (single switch)."""
-        return dataclasses.replace(self.lif, backend=self.backend,
-                                   interpret=self.interpret)
+        """The LIF config with this layer's policy injected (single switch)."""
+        return dataclasses.replace(self.lif, policy=self.policy)
 
 
 def init_pssa(key, cfg: PSSAConfig, dtype=jnp.float32):
@@ -170,26 +313,31 @@ def _merge_heads(x: jax.Array) -> jax.Array:
 def pssa_apply(params: Params, state: State, x: jax.Array, cfg: PSSAConfig,
                *, train: bool):
     """x: (T,B,N,D) real-valued features -> (T,B,N,D); residual added by caller."""
-    lbn = dict(train=train, backend=cfg.backend, spike_mm=cfg.spike_mm,
-               interpret=cfg.interpret)
-    xs = lif_scan(x, cfg.lif_cfg)                               # eq. 8  X' = SN(X)
-    q, s_q = linear_bn_apply(params["q"], state["q"], xs, **lbn)
-    k, s_k = linear_bn_apply(params["k"], state["k"], xs, **lbn)
-    v, s_v = linear_bn_apply(params["v"], state["v"], xs, **lbn)
-    qs = lif_scan(q, cfg.lif_cfg)                               # eq. 9 (spike Q/K/V)
-    ks = lif_scan(k, cfg.lif_cfg)
-    vs = lif_scan(v, cfg.lif_cfg)
+    pol = cfg.policy
+    xs = lif_scan(x, cfg.lif_cfg, site="pssa.lif")              # eq. 8  X' = SN(X)
+    q, s_q = linear_bn_apply(params["q"], state["q"], xs, train=train,
+                             policy=pol, site="pssa.qkv")
+    k, s_k = linear_bn_apply(params["k"], state["k"], xs, train=train,
+                             policy=pol, site="pssa.qkv")
+    v, s_v = linear_bn_apply(params["v"], state["v"], xs, train=train,
+                             policy=pol, site="pssa.qkv")
+    qs = lif_scan(q, cfg.lif_cfg, site="pssa.lif")              # eq. 9 (spike Q/K/V)
+    ks = lif_scan(k, cfg.lif_cfg, site="pssa.lif")
+    vs = lif_scan(v, cfg.lif_cfg, site="pssa.lif")
 
     qh, kh, vh = (_split_heads(a, cfg.n_heads) for a in (qs, ks, vs))
     if cfg.qk_first:
-        attn = jnp.einsum("tbhnd,tbhmd->tbhnm", qh, kh)          # spike counts
-        out = jnp.einsum("tbhnm,tbhmd->tbhnd", attn, vh)
-    else:  # exact reassociation (no softmax): K^T V first
+        attn = get_kernel("attn_qk", pol.resolve("attn_qk", "attn_qk"))(
+            qh, kh, pol, "attn_qk")                              # spike counts
+        out = get_kernel("attn_av", pol.resolve("attn_av", "attn_av"))(
+            attn, vh, pol, "attn_av")
+    else:  # exact reassociation (no softmax): K^T V first — kv is dense
         kv = jnp.einsum("tbhmd,tbhme->tbhde", kh, vh)
         out = jnp.einsum("tbhnd,tbhde->tbhne", qh, kv)
     out = _merge_heads(out) * cfg.scale                          # eq. 10 (* s)
-    out_s = lif_scan(out, cfg.lif_cfg)                           # SN(...)
-    z, s_z = linear_bn_apply(params["z"], state["z"], out_s, **lbn)
+    out_s = lif_scan(out, cfg.lif_cfg, site="pssa.lif")          # SN(...)
+    z, s_z = linear_bn_apply(params["z"], state["z"], out_s, train=train,
+                             policy=pol, site="pssa.proj")
     return z, {"q": s_q, "k": s_k, "v": s_v, "z": s_z}
 
 
@@ -202,14 +350,17 @@ class SMLPConfig:
     d_model: int
     d_ff: int
     lif: LIFConfig = LIFConfig()
-    backend: str = "jnp"
-    spike_mm: bool = False
-    interpret: bool | None = None
+    policy: ExecutionPolicy = ExecutionPolicy()
+    backend: dataclasses.InitVar[str | None] = None
+    spike_mm: dataclasses.InitVar[bool | None] = None
+    interpret: dataclasses.InitVar[bool | None] = None
+
+    def __post_init__(self, backend, spike_mm, interpret):
+        apply_legacy_exec_flags(self, backend, spike_mm, interpret)
 
     @property
     def lif_cfg(self) -> LIFConfig:
-        return dataclasses.replace(self.lif, backend=self.backend,
-                                   interpret=self.interpret)
+        return dataclasses.replace(self.lif, policy=self.policy)
 
 
 def init_smlp(key, cfg: SMLPConfig, dtype=jnp.float32):
@@ -221,12 +372,13 @@ def init_smlp(key, cfg: SMLPConfig, dtype=jnp.float32):
 
 def smlp_apply(params: Params, state: State, x: jax.Array, cfg: SMLPConfig,
                *, train: bool):
-    lbn = dict(train=train, backend=cfg.backend, spike_mm=cfg.spike_mm,
-               interpret=cfg.interpret)
-    xs = lif_scan(x, cfg.lif_cfg)             # pre-activation SN
-    h, s_a = linear_bn_apply(params["a"], state["a"], xs, **lbn)
-    hs = lif_scan(h, cfg.lif_cfg)
-    y, s_b = linear_bn_apply(params["b"], state["b"], hs, **lbn)
+    pol = cfg.policy
+    xs = lif_scan(x, cfg.lif_cfg, site="smlp.lif")   # pre-activation SN
+    h, s_a = linear_bn_apply(params["a"], state["a"], xs, train=train,
+                             policy=pol, site="smlp.a")
+    hs = lif_scan(h, cfg.lif_cfg, site="smlp.lif")
+    y, s_b = linear_bn_apply(params["b"], state["b"], hs, train=train,
+                             policy=pol, site="smlp.b")
     return y, {"a": s_a, "b": s_b}
 
 
@@ -242,22 +394,23 @@ class BlockConfig:
     lif: LIFConfig = LIFConfig()
     qk_first: bool = True
     attn_scale: float = 0.125
-    backend: str = "jnp"        # one switch for every LIF/BN/matmul in the block
-    spike_mm: bool = False
-    interpret: bool | None = None
+    policy: ExecutionPolicy = ExecutionPolicy()   # one switch for the block
+    backend: dataclasses.InitVar[str | None] = None
+    spike_mm: dataclasses.InitVar[bool | None] = None
+    interpret: dataclasses.InitVar[bool | None] = None
+
+    def __post_init__(self, backend, spike_mm, interpret):
+        apply_legacy_exec_flags(self, backend, spike_mm, interpret)
 
     @property
     def pssa(self) -> PSSAConfig:
         return PSSAConfig(self.d_model, self.n_heads, self.lif,
-                          self.attn_scale, self.qk_first,
-                          backend=self.backend, spike_mm=self.spike_mm,
-                          interpret=self.interpret)
+                          self.attn_scale, self.qk_first, policy=self.policy)
 
     @property
     def smlp(self) -> SMLPConfig:
         return SMLPConfig(self.d_model, self.d_ff, self.lif,
-                          backend=self.backend, spike_mm=self.spike_mm,
-                          interpret=self.interpret)
+                          policy=self.policy)
 
 
 def init_block(key, cfg: BlockConfig, dtype=jnp.float32):

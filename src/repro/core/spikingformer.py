@@ -18,6 +18,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.lif import LIFConfig, lif_scan
+from repro.core.policy import (ExecutionPolicy, apply_legacy_exec_flags,
+                               get_kernel, plan_sites, policy_from_flags,
+                               register_kernel, warn_deprecated_flags)
 from repro.core.spiking_layers import (BlockConfig, bn_apply, block_apply,
                                        init_block, init_bn, init_linear,
                                        linear_apply)
@@ -44,35 +47,38 @@ class SpikingFormerConfig:
     attn_scale: float = 0.125
     dtype: Any = jnp.float32
     remat: bool = False               # checkpoint each block over the scan
-    # Kernel backend for every LIF/BN/matmul site: "jnp" (lax.scan reference)
-    # or "pallas" (fused SOMA/GRAD + BN + packed spike-MM kernels).
-    backend: str = "jnp"
-    spike_mm: bool = False            # packed spike matmuls in Conv1DBN sites
-    interpret: bool | None = None     # Pallas interpret override (None = auto)
+    # Execution policy for every LIF/BN/matmul/attention site; derived
+    # configs (Block/PSSA/SMLP/LIF) inherit it. See docs/EXECUTION.md.
+    policy: ExecutionPolicy = ExecutionPolicy()
+    # Deprecated PR 1 spellings, folded into ``policy`` with a warning:
+    backend: dataclasses.InitVar[str | None] = None
+    spike_mm: dataclasses.InitVar[bool | None] = None
+    interpret: dataclasses.InitVar[bool | None] = None
+
+    def __post_init__(self, backend, spike_mm, interpret):
+        apply_legacy_exec_flags(self, backend, spike_mm, interpret)
 
     @property
     def block(self) -> BlockConfig:
         return BlockConfig(self.d_model, self.n_heads, self.d_ff, self.lif,
-                           self.qk_first, self.attn_scale,
-                           backend=self.backend, spike_mm=self.spike_mm,
-                           interpret=self.interpret)
+                           self.qk_first, self.attn_scale, policy=self.policy)
 
     @property
     def lif_cfg(self) -> LIFConfig:
-        """Tokenizer-site LIF config with the model backend injected."""
-        return dataclasses.replace(self.lif, backend=self.backend,
-                                   interpret=self.interpret)
+        """Tokenizer-site LIF config with the model policy injected."""
+        return dataclasses.replace(self.lif, policy=self.policy)
+
+    def with_policy(self, policy: ExecutionPolicy) -> "SpikingFormerConfig":
+        """Same model, different execution policy (params are compatible)."""
+        return dataclasses.replace(self, policy=policy)
 
     def with_backend(self, backend: str, *, spike_mm: bool | None = None,
                      interpret: bool | None = None) -> "SpikingFormerConfig":
-        """Same model, different execution backend (params are compatible)."""
-        from repro.core.backend import validate_backend
-        kw: dict[str, Any] = {"backend": validate_backend(backend)}
-        if spike_mm is not None:
-            kw["spike_mm"] = spike_mm
-        if interpret is not None:
-            kw["interpret"] = interpret
-        return dataclasses.replace(self, **kw)
+        """Deprecated: use ``with_policy(ExecutionPolicy(...))``."""
+        warn_deprecated_flags("SpikingFormerConfig.with_backend()")
+        return self.with_policy(policy_from_flags(backend, spike_mm,
+                                                  interpret,
+                                                  base=self.policy))
 
     @property
     def num_tokens(self) -> int:
@@ -85,6 +91,44 @@ class SpikingFormerConfig:
         assert self.patch_grid * (2 ** stages) == self.image_size, (
             "image_size must be patch_grid * 2^k")
         return stages
+
+    def execution_site_specs(self) -> tuple[tuple[str, str, int | None], ...]:
+        """(site, op, pack_dim) for every dispatch site in this model —
+        the input to :func:`repro.core.policy.plan_sites`. ``pack_dim`` is
+        the contraction dimension a bit-packed implementation would pack.
+
+        The attn sites only exist under ``qk_first=True``; the reassociated
+        Q(K^T V) path is a dense-product einsum pair that never dispatches
+        through the registry, so listing them would make the reported plan
+        claim an attention impl that never runs.
+        """
+        head_dim = self.d_model // self.n_heads
+        attn = (
+            ("attn_qk", "attn_qk", head_dim),
+            ("attn_av", "attn_av", self.num_tokens),
+        ) if self.qk_first else ()
+        return (
+            ("tokenizer.conv", "conv", None),
+            ("tokenizer.bn", "bn", None),
+            ("tokenizer.lif", "lif", None),
+            ("pssa.lif", "lif", None),
+            ("pssa.qkv", "linear_bn", self.d_model),
+        ) + attn + (
+            ("pssa.proj", "linear_bn", self.d_model),
+            ("smlp.lif", "lif", None),
+            ("smlp.a", "linear_bn", self.d_model),
+            ("smlp.b", "linear_bn", self.d_ff),
+        )
+
+    def execution_plan(self):
+        """Resolve the policy once against this model's shapes: one
+        :class:`~repro.core.policy.SiteDecision` per site, with packing
+        fallbacks decided here rather than silently per call."""
+        return plan_sites(self.policy, self.execution_site_specs())
+
+    def describe_execution(self) -> str:
+        """The per-site dispatch table (printed by bench_model_table)."""
+        return self.policy.describe(self.execution_site_specs())
 
     def param_count(self) -> int:
         d, f = self.d_model, self.d_ff
@@ -108,8 +152,10 @@ def _conv_init(key, c_in, c_out, dtype):
     return {"w": w}
 
 
-def _conv_apply(params, x):
-    # x: (TB, H, W, C) NHWC, stride-2 same-padded 3x3.
+@register_kernel("conv", "jnp")
+def _conv_apply(params, x, policy=None, site="tokenizer.conv"):
+    # x: (TB, H, W, C) NHWC, stride-2 same-padded 3x3. Registered so a fused
+    # conv+BN+LIF Pallas kernel (ROADMAP) can plug in per site later.
     return jax.lax.conv_general_dilated(
         x, params["w"].astype(x.dtype), window_strides=(2, 2), padding="SAME",
         dimension_numbers=("NHWC", "HWIO", "NHWC"))
@@ -135,16 +181,18 @@ def tokenizer_apply(params, state, images, cfg: SpikingFormerConfig, *,
     """images: (T, B, H, W, C) -> spike patches (T, B, N, D)."""
     t, b, h, w, c = images.shape
     x = images.reshape(t * b, h, w, c)
+    pol = cfg.policy
+    conv = get_kernel("conv", pol.resolve("tokenizer.conv", "conv"))
     new_states = []
     for p, s in zip(params, state):
-        x = _conv_apply(p["conv"], x)
+        x = conv(p["conv"], x, pol, "tokenizer.conv")
         # BN over (TB,H,W) per channel; LIF scans time, so unfold T.
         y, s_bn = bn_apply(p["bn"], s["bn"], x, train=train,
-                           backend=cfg.backend, interpret=cfg.interpret)
+                           policy=pol, site="tokenizer.bn")
         new_states.append({"bn": s_bn})
         th, hh, wh, ch = y.shape
         y = y.reshape(t, b, hh, wh, ch)
-        y = lif_scan(y, cfg.lif_cfg)
+        y = lif_scan(y, cfg.lif_cfg, site="tokenizer.lif")
         x = y.reshape(t * b, hh, wh, ch)
     x = x.reshape(t, b, -1, x.shape[-1])       # (T, B, N, D)
     return x, new_states

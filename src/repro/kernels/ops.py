@@ -113,6 +113,40 @@ def _smm_bwd(interpret, res, g):
 spike_matmul_train_op.defvjp(_smm_fwd, _smm_bwd)
 
 
+@partial(jax.custom_vjp, nondiff_argnums=(2,))
+def spike_bmm_train_op(spikes: jax.Array, w: jax.Array,
+                       interpret: bool | None = None) -> jax.Array:
+    """Differentiable batched bit-packed spike matmul:
+    (G, M, C) {0,1} x (G, C, K) -> (G, M, K).
+
+    The batched twin of :func:`spike_matmul_train_op`, used by the packed
+    PSSA attention path ((T, B, heads) folds to the batch axis G). FP packs
+    the spike operand to 1 bit/element and runs the batched Pallas kernel;
+    BP is the dense batched-matmul VJP, so gradients match the ``jnp.einsum``
+    attention path exactly. C must be a multiple of 8.
+    """
+    return spike_matmul.spike_matmul_batched(
+        spikes, w, interpret=resolve_interpret(interpret))
+
+
+def _sbmm_fwd(spikes, w, interpret):
+    out = spike_matmul.spike_matmul_batched(
+        spikes, w, interpret=resolve_interpret(interpret))
+    return out, (spikes, w)
+
+
+def _sbmm_bwd(interpret, res, g):
+    spikes, w = res
+    d_spikes = jnp.einsum("gmk,gck->gmc", g,
+                          w.astype(g.dtype)).astype(spikes.dtype)
+    d_w = jnp.einsum("gmc,gmk->gck", spikes.astype(g.dtype),
+                     g).astype(w.dtype)
+    return d_spikes, d_w
+
+
+spike_bmm_train_op.defvjp(_sbmm_fwd, _sbmm_bwd)
+
+
 def spike_matmul_op(spikes: jax.Array, w: jax.Array,
                     interpret: bool | None = None) -> jax.Array:
     """Bit-packed spike matmul (forward-only fast path for serving; for

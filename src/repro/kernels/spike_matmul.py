@@ -11,6 +11,7 @@ Packing is along the contraction dim C (LSB-first within each byte):
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -65,7 +66,10 @@ def spike_matmul_packed(packed: jax.Array, w: jax.Array, *, block_m: int = 256,
     c, k = w.shape
     assert c == c8 * 8, f"packed C {c8 * 8} != weight C {c}"
     out_dtype = out_dtype or w.dtype
-    bm, bk, bc = min(block_m, m), min(block_k, k), min(block_c, c)
+    bm, bk = min(block_m, m), min(block_k, k)
+    # The C axis is accumulated, so a ragged final block would fold padding
+    # into every output tile — snap bc to a divisor of C (both % 8 == 0).
+    bc = math.gcd(min(block_c, c), c)
     assert bc % 8 == 0
     grid = (pl.cdiv(m, bm), pl.cdiv(k, bk), pl.cdiv(c, bc))
     return pl.pallas_call(
@@ -82,3 +86,64 @@ def spike_matmul_packed(packed: jax.Array, w: jax.Array, *, block_m: int = 256,
 def spike_matmul(spikes: jax.Array, w: jax.Array, **kw) -> jax.Array:
     """Convenience: unpacked {0,1} spikes (M, C) x (C, K)."""
     return spike_matmul_packed(spike_pack(spikes), w, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Batched variant for the PSSA attention einsums: the (QK^T)V contractions
+# are per-(T, B, head) matmuls, so the grid grows a leading batch axis.
+# ---------------------------------------------------------------------------
+
+def _spike_bmm_kernel(sp_ref, w_ref, o_ref, acc_ref, *, n_cb):
+    """Grid (G, M/bm, K/bk, C/bc); fp32 VMEM accumulator over the C axis."""
+    cb = pl.program_id(3)
+
+    @pl.when(cb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = spike_unpack(sp_ref[0], dtype=w_ref.dtype)         # (bm, bc) in VMEM
+    acc_ref[...] += jnp.dot(x, w_ref[0],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(cb == n_cb - 1)
+    def _done():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block_m", "block_k", "block_c", "out_dtype", "interpret"))
+def spike_matmul_packed_batched(packed: jax.Array, w: jax.Array, *,
+                                block_m: int = 256, block_k: int = 256,
+                                block_c: int = 512, out_dtype=None,
+                                interpret: bool = True) -> jax.Array:
+    """packed: (G, M, C//8) uint8; w: (G, C, K) -> (G, M, K).
+
+    Same accumulator scheme as :func:`spike_matmul_packed` with one grid axis
+    per batch element; either operand may be the spike side upstream (the
+    attention AV product packs V^T and feeds attn^T here as ``w``).
+    """
+    g, m, c8 = packed.shape
+    gw, c, k = w.shape
+    assert gw == g, f"batch mismatch {gw} != {g}"
+    assert c == c8 * 8, f"packed C {c8 * 8} != weight C {c}"
+    out_dtype = out_dtype or w.dtype
+    bm, bk = min(block_m, m), min(block_k, k)
+    bc = math.gcd(min(block_c, c), c)   # see spike_matmul_packed
+    assert bc % 8 == 0
+    grid = (g, pl.cdiv(m, bm), pl.cdiv(k, bk), pl.cdiv(c, bc))
+    return pl.pallas_call(
+        functools.partial(_spike_bmm_kernel, n_cb=grid[3]),
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, bm, bc // 8),
+                               lambda gi, i, j, cb: (gi, i, cb)),
+                  pl.BlockSpec((1, bc, bk),
+                               lambda gi, i, j, cb: (gi, cb, j))],
+        out_specs=pl.BlockSpec((1, bm, bk), lambda gi, i, j, cb: (gi, i, j)),
+        out_shape=jax.ShapeDtypeStruct((g, m, k), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bk), jnp.float32)],
+        interpret=interpret)(packed, w)
+
+
+def spike_matmul_batched(spikes: jax.Array, w: jax.Array, **kw) -> jax.Array:
+    """Convenience: unpacked {0,1} spikes (G, M, C) x (G, C, K)."""
+    return spike_matmul_packed_batched(spike_pack(spikes), w, **kw)

@@ -66,11 +66,12 @@ def make_spikingformer_train_step(cfg, opt_cfg: OptimizerConfig) -> Callable:
     """Fused BPTT + AdamW step for the Spikingformer vision path.
 
     ``cfg`` is a :class:`repro.core.spikingformer.SpikingFormerConfig`; its
-    ``backend`` field selects the jnp or fused-Pallas execution path, so the
-    same train step runs the reference scan on CPU and the SOMA/GRAD kernels
-    on TPU. Returns ``step(params, state, opt_state, images, labels) ->
-    (params, state, opt_state, metrics)`` where ``state`` carries BN running
-    statistics.
+    ``policy`` field (an :class:`repro.core.policy.ExecutionPolicy`) selects
+    the execution path per site, so the same train step runs the reference
+    jnp scan on CPU and the fused SOMA/GRAD (+ packed spike-matmul /
+    packed-attention) kernels on TPU. Returns ``step(params, state,
+    opt_state, images, labels) -> (params, state, opt_state, metrics)``
+    where ``state`` carries BN running statistics.
     """
     from repro.core.spikingformer import spikingformer_grad_step
 

@@ -9,6 +9,7 @@ except ImportError:  # bare env: deterministic fallback shim
     from _hypothesis_shim import given, settings, strategies as st
 
 from repro.core.backend import BACKENDS
+from repro.core.policy import ExecutionPolicy
 from repro.core.lif import (LIFConfig, lif_reference_manual_grad, lif_scan,
                             lif_scan_with_state, lif_step)
 
@@ -62,7 +63,7 @@ def test_bptt_matches_eq12_pallas(alpha):
     """Same eq. 12 check through the fused SOMA/GRAD backend (t=4; each
     (t, alpha) pair is a fresh interpret-mode trace, so one t suffices —
     the t sweep runs on the jnp path above and in test_kernels.py)."""
-    cfg = LIFConfig(alpha=alpha, backend="pallas")
+    cfg = LIFConfig(alpha=alpha, policy=ExecutionPolicy(backend="pallas"))
     x = jax.random.normal(jax.random.PRNGKey(4), (4, 33)) * 2
     g = jax.random.normal(jax.random.PRNGKey(5), (4, 33))
     auto = jax.vjp(lambda xs: lif_scan(xs, cfg), x)[1](g)[0]
@@ -75,7 +76,7 @@ def test_backend_forward_parity(backend):
     """lif_scan spikes are bit-identical across backends (binary outputs)."""
     x = jax.random.normal(KEY, (4, 3, 5, 16)) * 2
     ref = lif_scan(x, LIFConfig())
-    got = lif_scan(x, LIFConfig(backend=backend))
+    got = lif_scan(x, LIFConfig(policy=ExecutionPolicy(backend=backend)))
     assert jnp.array_equal(ref, got)
 
 

@@ -1,0 +1,304 @@
+"""ExecutionPolicy + kernel-registry API: per-site dispatch, staticness
+under jit, deprecation-shim equivalence, and plan/fallback reporting."""
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.spikingformer import get_spikingformer_config
+from repro.core.lif import LIFConfig, lif_scan
+from repro.core.policy import (ExecutionPolicy, available_impls, get_kernel,
+                               named_policy, plan_sites, policy_from_flags,
+                               register_kernel, unregister_kernel)
+from repro.core.spiking_layers import (BlockConfig, init_linear_bn,
+                                       linear_bn_apply)
+from repro.core.spikingformer import SpikingFormerConfig
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# ExecutionPolicy value semantics
+# ---------------------------------------------------------------------------
+
+def test_policy_canonical_hash_eq():
+    """Dict / unsorted-tuple spellings canonicalize to the same value —
+    policies are static jit args, so equal policies must hash equal."""
+    a = ExecutionPolicy(backend="pallas", overrides={"b": "y", "a": "x"})
+    b = ExecutionPolicy(backend="pallas", overrides=(("b", "y"), ("a", "x")))
+    c = ExecutionPolicy(backend="pallas", overrides=(("a", "x"), ("b", "y")))
+    assert a == b == c
+    assert hash(a) == hash(b) == hash(c)
+    assert a != ExecutionPolicy(backend="pallas")
+
+
+def test_policy_is_frozen():
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        ExecutionPolicy().backend = "pallas"
+
+
+def test_policy_rejects_unknown_backend():
+    with pytest.raises(ValueError, match="unknown backend"):
+        ExecutionPolicy(backend="tpu")
+
+
+def test_resolve_precedence_site_over_op_over_backend():
+    p = ExecutionPolicy(backend="pallas",
+                        overrides={"linear_bn": "pallas+spike_mm",
+                                   "pssa.qkv": "jnp"})
+    assert p.resolve("pssa.qkv", "linear_bn") == "jnp"            # site wins
+    assert p.resolve("smlp.a", "linear_bn") == "pallas+spike_mm"  # op override
+    assert p.resolve("pssa.lif", "lif") == "pallas"               # backend
+    assert ExecutionPolicy().resolve("attn_qk", "attn_qk") == "jnp"
+    # attention packing is opt-in: backend=pallas alone keeps the einsum
+    assert ExecutionPolicy(backend="pallas").resolve(
+        "attn_qk", "attn_qk") == "jnp"
+
+
+def test_with_sites_merge_and_remove():
+    p = named_policy("pallas-full")
+    q = p.with_sites({"attn_qk": None, "tokenizer.bn": "jnp"})
+    assert q.resolve("attn_qk", "attn_qk") == "jnp"
+    assert q.resolve("tokenizer.bn", "bn") == "jnp"
+    assert q.resolve("attn_av", "attn_av") == "pallas_packed"
+
+
+def test_policy_static_under_jit_no_retrace():
+    traces = []
+
+    @partial(jax.jit, static_argnames=("pol",))
+    def f(x, pol):
+        traces.append(pol)
+        return x + 1
+
+    x = jnp.zeros(3)
+    f(x, ExecutionPolicy(backend="pallas", overrides={"a": "b"}))
+    f(x, ExecutionPolicy(backend="pallas", overrides=(("a", "b"),)))
+    assert len(traces) == 1, "logically-equal policies must not retrace"
+    f(x, ExecutionPolicy(backend="pallas"))
+    assert len(traces) == 2
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+def test_registry_unknown_impl_lists_available():
+    with pytest.raises(KeyError, match="available"):
+        get_kernel("lif", "definitely-not-registered")
+    assert "jnp" in available_impls("lif")
+    assert "pallas" in available_impls("lif")
+    assert "pallas+spike_mm" in available_impls("linear_bn")
+    assert "pallas_packed" in available_impls("attn_qk")
+
+
+def test_third_party_impl_dispatches_per_site():
+    """A freshly-registered implementation is reachable via a site override
+    — the extension point docs/EXECUTION.md documents."""
+    calls = []
+
+    @register_kernel("linear_bn", "test-spy")
+    def _spy(params, state, x, train, policy, site):
+        calls.append(site)
+        return get_kernel("linear_bn", "jnp")(params, state, x, train,
+                                              policy, site)
+
+    try:
+        params, state = init_linear_bn(KEY, 8, 8)
+        x = jax.random.normal(KEY, (4, 8))
+        pol = ExecutionPolicy(overrides={"my.site": "test-spy"})
+        y_spy, _ = linear_bn_apply(params, state, x, train=True, policy=pol,
+                                   site="my.site")
+        y_ref, _ = linear_bn_apply(params, state, x, train=True,
+                                   policy=ExecutionPolicy(), site="other")
+        assert calls == ["my.site"]
+        np.testing.assert_allclose(np.asarray(y_spy), np.asarray(y_ref))
+    finally:
+        unregister_kernel("linear_bn", "test-spy")
+
+
+def test_lif_scan_dispatches_through_registry():
+    """Per-site override on lif: a pallas-backend policy with a jnp override
+    at one site still produces identical spikes (and really dispatches)."""
+    x = jax.random.normal(KEY, (3, 4, 16)) * 2
+    pol = ExecutionPolicy(backend="pallas", overrides={"quiet.lif": "jnp"})
+    a = lif_scan(x, LIFConfig(policy=pol), site="quiet.lif")
+    b = lif_scan(x, LIFConfig(policy=pol), site="loud.lif")
+    assert jnp.array_equal(a, b)   # parity across impls (binary spikes)
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shims (PR 1 spellings)
+# ---------------------------------------------------------------------------
+
+def test_with_backend_shim_equals_with_policy_and_warns():
+    cfg = SpikingFormerConfig(num_layers=1, d_model=16, n_heads=2, d_ff=32,
+                              time_steps=1, image_size=8, patch_grid=4,
+                              num_classes=2)
+    with pytest.warns(DeprecationWarning):
+        legacy = cfg.with_backend("pallas", spike_mm=True, interpret=True)
+    new = cfg.with_policy(ExecutionPolicy(
+        backend="pallas", interpret=True,
+        overrides={"linear_bn": "pallas+spike_mm"}))
+    assert legacy == new
+    assert hash(legacy) == hash(new)
+
+
+def test_ctor_kwarg_shims_warn_and_fold_into_policy():
+    with pytest.warns(DeprecationWarning):
+        lif = LIFConfig(backend="pallas")
+    assert lif == LIFConfig(policy=ExecutionPolicy(backend="pallas"))
+    with pytest.warns(DeprecationWarning):
+        blk = BlockConfig(d_model=16, n_heads=2, d_ff=32, backend="pallas",
+                          spike_mm=True)
+    assert blk.policy == policy_from_flags("pallas", True)
+    assert blk.pssa.policy == blk.policy       # derived configs inherit
+    assert blk.smlp.policy == blk.policy
+    assert blk.pssa.lif_cfg.policy == blk.policy
+
+
+def test_with_backend_jnp_drops_pallas_overrides():
+    """PR 1 equivalence: backend="jnp" ran the dense jnp path regardless of
+    spike_mm, so the shim must not leave packed-Pallas overrides active."""
+    cfg = get_spikingformer_config("spikingformer-smoke@pallas-full")
+    with pytest.warns(DeprecationWarning):
+        back = cfg.with_backend("jnp")
+    assert back.policy.overrides == ()
+    for site, op, _ in cfg.execution_site_specs():
+        assert back.policy.resolve(site, op) == "jnp"
+    # the PR 1 round-trip: pallas+spike_mm then back to jnp == plain jnp
+    with pytest.warns(DeprecationWarning):
+        rt = cfg.with_policy(ExecutionPolicy()) \
+                .with_backend("pallas", spike_mm=True).with_backend("jnp")
+    assert rt.policy == ExecutionPolicy()
+
+
+def test_get_config_legacy_kwargs_warn():
+    with pytest.warns(DeprecationWarning):
+        cfg = get_spikingformer_config("spikingformer-smoke",
+                                       backend="pallas", spike_mm=True)
+    want = get_spikingformer_config(
+        "spikingformer-smoke", policy=policy_from_flags("pallas", True))
+    assert cfg == want
+
+
+def test_preset_at_suffix_accepts_policy_names():
+    cfg = get_spikingformer_config("spikingformer-smoke@pallas-full")
+    assert cfg.policy == named_policy("pallas-full")
+    cfg = get_spikingformer_config("spikingformer-smoke@pallas")
+    assert cfg.policy == named_policy("pallas")
+
+
+def test_env_repro_backend_selects_policy(monkeypatch):
+    """REPRO_BACKEND now reaches preset resolution (not just the example's
+    argparse default), so `REPRO_BACKEND=pallas pytest` runs pallas."""
+    monkeypatch.setenv("REPRO_BACKEND", "pallas-full")
+    cfg = get_spikingformer_config("spikingformer-smoke")
+    assert cfg.policy == named_policy("pallas-full")
+    monkeypatch.setenv("REPRO_BACKEND", "jnp")
+    cfg = get_spikingformer_config("spikingformer-smoke")
+    assert cfg.policy == named_policy("jnp")
+    # explicit requests beat the environment
+    monkeypatch.setenv("REPRO_BACKEND", "pallas-full")
+    cfg = get_spikingformer_config("spikingformer-smoke",
+                                   policy=named_policy("pallas"))
+    assert cfg.policy == named_policy("pallas")
+
+
+# ---------------------------------------------------------------------------
+# Plan / packing-constraint resolution (the no-silent-fallback contract)
+# ---------------------------------------------------------------------------
+
+def test_plan_resolves_packing_fallback_once():
+    """A site whose contraction dim is not a multiple of 8 is resolved to
+    its dense fallback at *plan* time, with a reported note."""
+    cfg = SpikingFormerConfig(num_layers=1, d_model=36, n_heads=2, d_ff=20,
+                              time_steps=1, image_size=16, patch_grid=4,
+                              num_classes=2,
+                              policy=named_policy("pallas-full"))
+    rows = {r.site: r for r in cfg.execution_plan()}
+    qkv = rows["pssa.qkv"]                       # packs d_model = 36
+    assert qkv.requested == "pallas+spike_mm"
+    assert qkv.effective == "pallas"
+    assert "% 8" in qkv.note
+    qk = rows["attn_qk"]                         # packs head_dim = 18
+    assert qk.requested == "pallas_packed" and qk.effective == "jnp"
+    av = rows["attn_av"]                         # packs num_tokens = 16: OK
+    assert av.effective == "pallas_packed" and av.note == ""
+    assert rows["smlp.b"].effective == "pallas"  # packs d_ff = 20
+
+    table = cfg.describe_execution()
+    assert "pssa.qkv" in table and "attn_qk" in table
+    assert "pallas+spike_mm" in table
+
+
+def test_plan_rejects_unregistered_impl():
+    pol = ExecutionPolicy(overrides={"lif": "no-such-impl"})
+    with pytest.raises(KeyError, match="no-such-impl"):
+        plan_sites(pol, [("tokenizer.lif", "lif", None)])
+
+
+def test_plan_rejects_typod_site_key():
+    """An override key matching no site and no op is a typo: it must fail
+    at validation time, not silently do nothing."""
+    pol = named_policy("pallas").with_sites(
+        {"pssa.kqv": "pallas+spike_mm"})   # typo of pssa.qkv
+    with pytest.raises(ValueError, match="pssa.kqv"):
+        get_spikingformer_config("spikingformer-smoke", policy=pol)
+    # op-name keys are always valid, even when no spec lists that op
+    plan_sites(ExecutionPolicy(overrides={"attn_qk": "jnp"}),
+               [("tokenizer.lif", "lif", None)])
+
+
+def test_plan_excludes_attn_sites_when_kv_first():
+    """qk_first=False takes the reassociated dense-einsum path, which never
+    dispatches attn_qk/attn_av — the reported plan must not claim packed
+    attention runs there."""
+    cfg = get_spikingformer_config("spikingformer-smoke@pallas-full")
+    kv = dataclasses.replace(cfg, qk_first=False)
+    sites = [r.site for r in kv.execution_plan()]
+    assert "attn_qk" not in sites and "attn_av" not in sites
+    assert "attn_qk" not in kv.describe_execution()
+    assert "attn_qk" in [r.site for r in cfg.execution_plan()]
+
+
+def test_aligned_plan_has_no_fallbacks():
+    cfg = get_spikingformer_config("spikingformer-smoke@pallas-full")
+    assert all(r.note == "" and r.effective == r.requested
+               for r in cfg.execution_plan())
+
+
+# ---------------------------------------------------------------------------
+# Packed-attention parity at the LIF(op) level (block/model levels live in
+# test_spikingformer.py::test_block_backend_grad_parity / _model_parity)
+# ---------------------------------------------------------------------------
+
+def test_packed_attention_op_parity():
+    """attn_qk/attn_av packed impls == the jnp einsums on spike inputs,
+    values and gradients."""
+    t, b, h, n, dh = 2, 2, 2, 16, 16
+    q = (jax.random.uniform(jax.random.PRNGKey(1), (t, b, h, n, dh)) < 0.4
+         ).astype(jnp.float32)
+    k = (jax.random.uniform(jax.random.PRNGKey(2), (t, b, h, n, dh)) < 0.4
+         ).astype(jnp.float32)
+    v = (jax.random.uniform(jax.random.PRNGKey(3), (t, b, h, n, dh)) < 0.4
+         ).astype(jnp.float32)
+    pol = ExecutionPolicy(backend="pallas", interpret=True)
+
+    def attn(impl, qq, kk, vv):
+        s = get_kernel("attn_qk", impl)(qq, kk, pol, "attn_qk")
+        o = get_kernel("attn_av", impl)(s, vv, pol, "attn_av")
+        return jnp.sum(o ** 2)
+
+    for impl in ("jnp", "pallas_packed"):
+        assert impl in available_impls("attn_qk")
+    lj, gj = jax.value_and_grad(partial(attn, "jnp"),
+                                argnums=(0, 1, 2))(q, k, v)
+    lp, gp = jax.value_and_grad(partial(attn, "pallas_packed"),
+                                argnums=(0, 1, 2))(q, k, v)
+    np.testing.assert_allclose(float(lj), float(lp), rtol=1e-6)
+    for a, bb in zip(gj, gp):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(bb), atol=1e-5)

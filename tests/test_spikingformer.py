@@ -4,14 +4,18 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.configs.spikingformer import get_spikingformer_config
 from repro.core.backend import BACKENDS
+from repro.core.policy import named_policy
 from repro.core.spikingformer import (SpikingFormerConfig, init_spikingformer,
                                       spikingformer_apply,
                                       spikingformer_grad_step)
 
-CFG = SpikingFormerConfig(num_layers=2, d_model=64, n_heads=2, d_ff=128,
-                          time_steps=2, image_size=32, in_channels=3,
-                          patch_grid=8, num_classes=10)
+# The smoke preset honours REPRO_BACKEND, so the CI pallas-full leg runs
+# this whole module under the full-Pallas policy.
+CFG = get_spikingformer_config("spikingformer-smoke")
+# Parity baselines must stay pinned to the jnp reference regardless of env.
+CFG_JNP = CFG.with_policy(named_policy("jnp"))
 KEY = jax.random.PRNGKey(0)
 
 
@@ -88,7 +92,7 @@ def test_qk_first_equals_kv_first(backend):
     """eq. 10 has no softmax so (QK^T)V == Q(K^T V) exactly — the paper's
     attention is reassociable (the beyond-paper TPU optimization)."""
     import dataclasses
-    cfg1 = CFG.with_backend(backend)
+    cfg1 = CFG.with_policy(named_policy(backend))
     cfg2 = dataclasses.replace(cfg1, qk_first=False)
     params, state = init_spikingformer(KEY, CFG)
     imgs = jax.random.uniform(KEY, (2, 32, 32, 3))
@@ -99,9 +103,17 @@ def test_qk_first_equals_kv_first(backend):
 
 
 # ---------------------------------------------------------------------------
-# Kernel-backend parity: "pallas" (fused SOMA/GRAD + BN + spike-MM kernels,
-# interpret mode on CPU) must reproduce the "jnp" reference end-to-end.
+# Execution-policy parity: every pallas-backed policy (fused SOMA/GRAD + BN
+# + packed spike-MM + packed attention kernels, interpret mode on CPU) must
+# reproduce the "jnp" reference end-to-end.
 # ---------------------------------------------------------------------------
+
+PARITY_POLICIES = {
+    "pallas": named_policy("pallas"),
+    "pallas+spike_mm": named_policy("pallas").with_sites(
+        {"linear_bn": "pallas+spike_mm"}),
+    "pallas-full": named_policy("pallas-full"),
+}
 
 def _grad_trees_close(ga, gb, atol=1e-5):
     """Scale-aware parity: per-tensor max|a-b| <= atol * max(1, max|b|).
@@ -121,15 +133,16 @@ def _grad_trees_close(ga, gb, atol=1e-5):
             err_msg=f"grad mismatch at {jax.tree_util.keystr(path)}")
 
 
-@pytest.mark.parametrize("spike_mm", [False, True])
-def test_block_backend_grad_parity(spike_mm):
+@pytest.mark.parametrize("policy_name", sorted(PARITY_POLICIES))
+def test_block_backend_grad_parity(policy_name):
     """Full SpikingformerBlock: forward + parameter/input grads agree
-    between backends (the fused VJPs are eq. 12 / eq. 19-23 verbatim)."""
+    between execution policies (the fused VJPs are eq. 12 / eq. 19-23
+    verbatim; the packed attention path has a dense einsum VJP)."""
     import dataclasses
     from repro.core.spiking_layers import BlockConfig, block_apply, init_block
 
     cfg_j = BlockConfig(d_model=32, n_heads=2, d_ff=64)
-    cfg_p = dataclasses.replace(cfg_j, backend="pallas", spike_mm=spike_mm)
+    cfg_p = dataclasses.replace(cfg_j, policy=PARITY_POLICIES[policy_name])
     params, state = init_block(jax.random.PRNGKey(2), cfg_j)
     x = jax.random.normal(jax.random.PRNGKey(3), (2, 2, 16, 32))
 
@@ -146,21 +159,26 @@ def test_block_backend_grad_parity(spike_mm):
     _grad_trees_close(gj, gp)
 
 
-@pytest.mark.parametrize("spike_mm", [
-    # spike_mm=False differs only in the matmul path, which the block-level
-    # parity test already covers both ways — keep one model-level run fast.
-    pytest.param(False, marks=pytest.mark.slow),
-    True,
+@pytest.mark.parametrize("policy_name", [
+    # plain "pallas" differs from jnp only in the LIF/BN kernels, which the
+    # block-level parity test already covers — keep the model-level run to
+    # the policies that add matmul/attention packing.
+    pytest.param("pallas", marks=pytest.mark.slow),
+    "pallas+spike_mm",
+    "pallas-full",
 ])
-def test_model_backend_parity(model, spike_mm):
+def test_model_backend_parity(model, policy_name):
     """Model-level acceptance check: loss, logits, parameter gradients and
-    BN running-stat updates agree between backend="jnp" and "pallas"."""
+    BN running-stat updates agree between the jnp policy and every
+    pallas-backed policy (including the packed (QK^T)V attention path)."""
+    import dataclasses
     from repro.core.spikingformer import spikingformer_loss
 
     params, state = model
     imgs = jax.random.uniform(jax.random.PRNGKey(9), (2, 32, 32, 3))
     labels = jnp.array([1, 3])
-    cfg_p = CFG.with_backend("pallas", spike_mm=spike_mm, interpret=True)
+    cfg_p = CFG.with_policy(dataclasses.replace(
+        PARITY_POLICIES[policy_name], interpret=True))
 
     def run(cfg):
         (loss, (st, _)), grads = jax.value_and_grad(
@@ -168,14 +186,14 @@ def test_model_backend_parity(model, spike_mm):
                                               cfg)
         return loss, st, grads
 
-    loss_j, st_j, g_j = run(CFG)
+    loss_j, st_j, g_j = run(CFG_JNP)
     loss_p, st_p, g_p = run(cfg_p)
     np.testing.assert_allclose(float(loss_j), float(loss_p), atol=1e-6)
     _grad_trees_close(g_j, g_p)
     for a, b in zip(jax.tree.leaves(st_j), jax.tree.leaves(st_p)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
 
-    lg_j, _ = spikingformer_apply(params, state, imgs, CFG, train=False)
+    lg_j, _ = spikingformer_apply(params, state, imgs, CFG_JNP, train=False)
     lg_p, _ = spikingformer_apply(params, state, imgs, cfg_p, train=False)
     np.testing.assert_allclose(np.asarray(lg_j), np.asarray(lg_p), atol=1e-5,
                                rtol=1e-5)
