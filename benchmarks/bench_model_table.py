@@ -93,6 +93,71 @@ def backend_ab_rows(reps: int = 2) -> list[str]:
     return lines
 
 
+def time_chunk_rows() -> list[str]:
+    """Temporal-tiling A/B on the smoke Spikingformer: for time_chunk in
+    {1, T/2, T} report the analytic LIF-residual bytes (the docs/SHARDING.md
+    memory math), the compiled step's temp-buffer bytes when XLA reports
+    them, and gradient parity vs the single-shot scan (exact by
+    construction — remat recomputes, it never approximates)."""
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.spikingformer import get_spikingformer_config
+    from repro.core.policy import named_policy
+    from repro.core.spikingformer import (init_spikingformer,
+                                          lif_residual_accounting,
+                                          spikingformer_loss)
+
+    cfg = get_spikingformer_config("spikingformer-smoke",
+                                   policy=named_policy("jnp"))
+    params, state = init_spikingformer(jax.random.PRNGKey(0), cfg)
+    imgs = jax.random.uniform(jax.random.PRNGKey(1), (2, 32, 32, 3))
+    labels = jnp.arange(2) % cfg.num_classes
+    grad_fn = jax.jit(jax.value_and_grad(spikingformer_loss, has_aux=True),
+                      static_argnums=4)
+
+    t = cfg.time_steps
+    lines = ["time_chunk,lif_residual_bytes,step_temp_bytes,"
+             "max_grad_diff_vs_single_shot"]
+    (_, _), base_grads = grad_fn(params, state, imgs, labels, cfg)
+    for tc in sorted({1, max(t // 2, 1), t}):
+        c = dataclasses.replace(cfg, time_chunk=tc)
+        acct = lif_residual_accounting(c, batch=2)
+        stored = acct["tiled_bytes"]
+        try:
+            # AOT-compile once and reuse the executable for the grads (a
+            # plain grad_fn(...) call would compile a second time — the
+            # jit call cache does not see manual lower().compile()).
+            compiled = grad_fn.lower(params, state, imgs, labels,
+                                     c).compile()
+            temp = getattr(compiled.memory_analysis(),
+                           "temp_size_in_bytes", None)
+            (_, _), grads = compiled(params, state, imgs, labels)
+        except Exception:
+            temp = None
+            (_, _), grads = grad_fn(params, state, imgs, labels, c)
+        diff = max(float(jnp.max(jnp.abs(a - b))) for a, b in
+                   zip(jax.tree.leaves(base_grads), jax.tree.leaves(grads)))
+        lines.append(f"{tc},{stored},{temp if temp is not None else 'n/a'},"
+                     f"{diff:.2e}")
+    return lines
+
+
+def sharding_rows() -> list[str]:
+    """The resolved sharding plan on a mesh over the local devices (the
+    same plan ``launch.train.build_spikingformer_state`` uses)."""
+    import jax
+
+    from repro.configs.spikingformer import get_spikingformer_config
+    from repro.launch.mesh import make_test_mesh
+
+    cfg = get_spikingformer_config("spikingformer-smoke")
+    mesh = make_test_mesh(jax.device_count(), 1)
+    return cfg.describe_sharding(mesh).splitlines()
+
+
 def run(smoke: bool = False) -> list[str]:
     lines = ["model,ops_g,energy_mj_ours,energy_mj_paper"]
     for r in rows():
@@ -100,6 +165,10 @@ def run(smoke: bool = False) -> list[str]:
                      f"{r['energy_mj_paper']}")
     lines.append("")
     lines += backend_ab_rows(reps=1 if smoke else 2)
+    lines.append("")
+    lines += time_chunk_rows()
+    lines.append("")
+    lines += sharding_rows()
     return lines
 
 

@@ -34,9 +34,11 @@ cfg = SpikingFormerConfig(num_layers=2, d_model=64, n_heads=2, d_ff=128,
 params, state = init_spikingformer(jax.random.PRNGKey(0), cfg)
 imgs = jax.random.uniform(jax.random.PRNGKey(1), (8, 32, 32, 3))
 labels = jnp.arange(8) % 10
+# spikingformer_grad_step is deliberately un-jitted (it traces inside the
+# jitted train step); direct callers compile it themselves.
+grad_step = jax.jit(spikingformer_grad_step, static_argnums=4)
 for step in range(5):
-    grads, state, metrics = spikingformer_grad_step(params, state, imgs,
-                                                    labels, cfg)
+    grads, state, metrics = grad_step(params, state, imgs, labels, cfg)
     params = jax.tree.map(lambda p, g: p - 5e-2 * g, params, grads)
     print(f"[snn] step {step} loss {float(metrics['loss']):.4f}")
 

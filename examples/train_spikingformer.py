@@ -3,37 +3,30 @@ learnable synthetic vision task for a few hundred steps, with AdamW,
 cosine schedule, checkpointing and straggler monitoring.
 
 The task: classify which quadrant of the image carries the brightest
-Gaussian blob (deterministic synthetic data — loss should fall well below
-ln(4) chance level within ~100 steps).
+Gaussian blob (the shared ``repro.train.data.SyntheticVision`` stream —
+loss should fall well below ln(4) chance level within ~100 steps).
 
 Run:  PYTHONPATH=src python examples/train_spikingformer.py [--steps 200]
+
+For mesh-sharded multi-device training use the launch driver instead:
+``python -m repro.launch.train --arch spikingformer-tiny`` (same model,
+same train-step factory, plus FSDP + data/model sharding).
 """
 import argparse
 import os
+import warnings
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.spikingformer import get_spikingformer_config
 from repro.core.policy import list_named_policies, named_policy
 from repro.core.spikingformer import init_spikingformer
 from repro.train.checkpoint import save_checkpoint
+from repro.train.data import SyntheticVision, VisionDataConfig
 from repro.train.loop import make_spikingformer_train_step
 from repro.train.optimizer import OptimizerConfig, init_opt_state
 from repro.train.resilience import StragglerMonitor
-
-
-def make_batch(step: int, batch: int, size: int = 32):
-    rng = np.random.default_rng(step)
-    labels = rng.integers(0, 4, size=batch)
-    imgs = rng.normal(0, 0.1, size=(batch, size, size, 3)).astype(np.float32)
-    half = size // 2
-    for i, lab in enumerate(labels):
-        y0 = (lab // 2) * half
-        x0 = (lab % 2) * half
-        imgs[i, y0:y0 + half, x0:x0 + half] += 1.0
-    return jnp.asarray(imgs), jnp.asarray(labels)
 
 
 def main() -> None:
@@ -47,31 +40,41 @@ def main() -> None:
                          "pallas (fused SOMA/GRAD + BN kernels; interpret "
                          "mode off-TPU) or pallas-full (adds the bit-packed "
                          "spike matmuls and packed (QK^T)V attention)")
+    ap.add_argument("--time-chunk", type=int, default=None,
+                    help="temporal tile length for the BPTT scan (memory "
+                         "scales with T/time_chunk; gradients are exact)")
     ap.add_argument("--spike-mm", action="store_true",
-                    help="deprecated: add the packed Conv1DBN matmuls to "
-                         "the chosen policy (use --policy pallas-full)")
+                    help="deprecated: use --policy pallas-full")
     args = ap.parse_args()
 
     policy = named_policy(args.policy)
     if args.spike_mm:
+        # One-release shim, same story as the config-kwarg deprecations:
+        # accepted, warned about, folded into the policy spelling.
+        warnings.warn("--spike-mm is deprecated; use --policy pallas-full "
+                      "(see docs/EXECUTION.md)", DeprecationWarning,
+                      stacklevel=1)
         policy = policy.with_sites({"linear_bn": "pallas+spike_mm"})
-    cfg = get_spikingformer_config("spikingformer-tiny", policy=policy)
+    cfg = get_spikingformer_config("spikingformer-tiny", policy=policy,
+                                   time_chunk=args.time_chunk)
     print(f"spikingformer params: {cfg.param_count():,} "
-          f"policy={args.policy}")
+          f"policy={args.policy} time_chunk={cfg.time_chunk}")
     print(cfg.describe_execution())
     params, state = init_spikingformer(jax.random.PRNGKey(0), cfg)
     opt_cfg = OptimizerConfig(lr=2e-3, warmup_steps=20,
                               total_steps=args.steps, weight_decay=0.01)
     opt_state = init_opt_state(params)
     train_step = make_spikingformer_train_step(cfg, opt_cfg)
+    data = SyntheticVision(VisionDataConfig(
+        image_size=cfg.image_size, num_classes=cfg.num_classes,
+        global_batch=args.batch, channels=cfg.in_channels))
     monitor = StragglerMonitor()
 
     for step in range(args.steps):
         monitor.step_start()
-        imgs, labels = make_batch(step, args.batch)
-        params, state, opt_state, metrics = train_step(params, state,
-                                                       opt_state, imgs,
-                                                       labels)
+        batch = data.batch(step)
+        params, state, opt_state, metrics = train_step(
+            params, state, opt_state, batch["images"], batch["labels"])
         monitor.step_end()
         if step % 20 == 0 or step == args.steps - 1:
             print(f"step {step:4d} loss {float(metrics['loss']):.4f} "

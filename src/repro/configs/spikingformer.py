@@ -20,6 +20,7 @@ fallback — per-site, at config time, never silently per call.
 """
 from __future__ import annotations
 
+import dataclasses
 import os
 
 from repro.core.policy import (ExecutionPolicy, default_policy, log_fallbacks,
@@ -47,11 +48,13 @@ def list_spikingformer_configs() -> list[str]:
 
 def get_spikingformer_config(name: str, *,
                              policy: ExecutionPolicy | None = None,
+                             time_chunk: int | None = None,
                              backend: str | None = None,
                              spike_mm: bool | None = None,
                              interpret: bool | None = None
                              ) -> SpikingFormerConfig:
-    """Look up a preset, optionally rebinding the execution policy.
+    """Look up a preset, optionally rebinding the execution policy and the
+    temporal tile length (``time_chunk``, see docs/SHARDING.md).
 
     Precedence: explicit legacy flags (deprecated) > ``policy=`` kwarg >
     ``@<policy>`` name suffix > ``REPRO_BACKEND`` env var > the preset's own
@@ -62,6 +65,8 @@ def get_spikingformer_config(name: str, *,
         if policy is None:
             policy = named_policy(suffix)
     cfg = SPIKINGFORMER_PRESETS[name]
+    if time_chunk is not None:
+        cfg = dataclasses.replace(cfg, time_chunk=time_chunk)
     if backend is not None or spike_mm is not None or interpret is not None:
         warn_deprecated_flags(
             "get_spikingformer_config(backend=/spike_mm=/interpret=)")

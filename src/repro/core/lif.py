@@ -43,6 +43,11 @@ class LIFConfig:
     th_lo: float = 0.0          # surrogate window lower bound  (paper: th_f < U < th_r
     th_hi: float = 2.0          #   one-sided; we centre the window on th_f)
     grad_scale: float = 1.0     # surrogate magnitude inside the window
+    # Temporal tiling (the paper's temporal blocking): split the T axis into
+    # remat'd chunks of this length, carrying (U, S) across chunk
+    # boundaries. None/0 = single-shot scan. Gradients are exact either way;
+    # stored BPTT residuals scale with T/time_chunk instead of T.
+    time_chunk: int | None = None
     policy: ExecutionPolicy = ExecutionPolicy()
     # Deprecated PR 1 spellings, folded into ``policy`` with a warning:
     backend: dataclasses.InitVar[str | None] = None
@@ -134,6 +139,81 @@ def _lif_scan_pallas(x_seq: jax.Array, cfg: LIFConfig, site: str) -> jax.Array:
     return s.reshape(shape)
 
 
+@register_kernel("lif_state", "jnp")
+def _lif_state_jnp(x_seq: jax.Array, u0: jax.Array, s0: jax.Array,
+                   cfg: LIFConfig, site: str):
+    """Reference stateful scan: carries (U, S) in and out."""
+
+    def step(carry, x):
+        u_prev, s_prev = carry
+        u, s = lif_step(u_prev, s_prev, x, cfg)
+        return (u, s), s
+
+    (u, s), spikes = jax.lax.scan(step, (u0, s0), x_seq)
+    return spikes, (u, s)
+
+
+@register_kernel("lif_state", "pallas")
+def _lif_state_pallas(x_seq: jax.Array, u0: jax.Array, s0: jax.Array,
+                      cfg: LIFConfig, site: str):
+    """Fused stateful SOMA: the carried state folds into the first input
+    step and the GRAD kernel is seeded with the carry cotangent, so the
+    temporally-tiled recursion matches the single-shot kernel exactly."""
+    from repro.core.backend import fold_time_major
+    from repro.kernels import ops
+
+    if x_seq.ndim < 2:
+        from repro.core.policy import runtime_fallback
+        runtime_fallback(site, "pallas",
+                         f"input ndim {x_seq.ndim} < 2 -> jnp stateful scan")
+        return _lif_state_jnp(x_seq, u0, s0, cfg, site)
+    x3, shape = fold_time_major(x_seq)
+    state_fold = x3.shape[1:]
+    s, u_last, s_last = ops.lif_soma_carry_op(
+        x3, u0.reshape(state_fold), s0.reshape(state_fold),
+        cfg.alpha, cfg.th_fire, cfg.th_lo, cfg.th_hi, cfg.grad_scale,
+        cfg.policy.interpret)
+    return s.reshape(shape), (u_last.reshape(shape[1:]),
+                              s_last.reshape(shape[1:]))
+
+
+def _lif_state_kernel(impl: str, site: str):
+    """The stateful twin of a lif impl, falling back (logged) to jnp for
+    third-party impls that register no ``lif_state`` row."""
+    from repro.core.policy import runtime_fallback
+    try:
+        return get_kernel("lif_state", impl)
+    except KeyError:
+        runtime_fallback(site, impl,
+                         "no lif_state registration -> jnp stateful scan")
+        return _lif_state_jnp
+
+
+def _lif_scan_chunked(x_seq: jax.Array, cfg: LIFConfig, site: str,
+                      impl: str) -> jax.Array:
+    """Temporally-tiled BPTT scan: lax.scan over T/time_chunk remat'd
+    chunks, each running the stateful kernel with the carried (U, S).
+
+    ``jax.checkpoint`` drops the per-step residuals inside a chunk (they are
+    recomputed during BP), so the stored state between FP and BP is the
+    (U, S) carry at the T/time_chunk chunk boundaries — the paper's
+    temporal-blocking memory profile — while the gradients stay exact.
+    """
+    t = x_seq.shape[0]
+    tc = cfg.time_chunk
+    stateful = _lif_state_kernel(impl, site)
+    chunks = x_seq.reshape(t // tc, tc, *x_seq.shape[1:])
+
+    def body(carry, x_chunk):
+        u, s = carry
+        spikes, (u2, s2) = stateful(x_chunk, u, s, cfg, site)
+        return (u2, s2), spikes
+
+    zero = jnp.zeros_like(x_seq[0])
+    (_, _), out = jax.lax.scan(jax.checkpoint(body), (zero, zero), chunks)
+    return out.reshape(x_seq.shape)
+
+
 @partial(jax.jit, static_argnames=("cfg", "site"))
 def lif_scan(x_seq: jax.Array, cfg: LIFConfig, site: str = "lif") -> jax.Array:
     """Multi-step LIF over the leading time axis.
@@ -146,23 +226,38 @@ def lif_scan(x_seq: jax.Array, cfg: LIFConfig, site: str = "lif") -> jax.Array:
 
     ``site`` names this call site for per-site policy overrides (the model
     passes ``"tokenizer.lif"``/``"pssa.lif"``/``"smlp.lif"``).
+
+    With ``cfg.time_chunk`` set (and < T), the scan is temporally tiled:
+    chunks of that length run the stateful kernel under ``jax.checkpoint``
+    with the (U, S) carry threaded across chunk boundaries. Exact-gradient
+    equivalent to the single-shot scan.
     """
-    impl = cfg.policy.resolve(site, "lif")
-    return get_kernel("lif", impl)(x_seq, cfg, site)
+    tc = cfg.time_chunk
+    t = x_seq.shape[0]
+    if tc and 0 < tc < t:
+        if t % tc == 0:
+            # The tiled path dispatches the state-carrying twin op, so it
+            # resolves through "lif_state" — exactly what plan_sites /
+            # describe_execution report for the lif sites under tiling.
+            return _lif_scan_chunked(x_seq, cfg, site,
+                                     cfg.policy.resolve(site, "lif_state"))
+        from repro.core.policy import runtime_fallback
+        runtime_fallback(site, "lif_state",
+                         f"T={t} % time_chunk={tc} != 0 -> single-shot scan")
+    return get_kernel("lif", cfg.policy.resolve(site, "lif"))(x_seq, cfg,
+                                                              site)
 
 
-@partial(jax.jit, static_argnames=("cfg",))
+@partial(jax.jit, static_argnames=("cfg", "site"))
 def lif_scan_with_state(x_seq: jax.Array, u0: jax.Array, s0: jax.Array,
-                        cfg: LIFConfig):
-    """Stateful variant for streaming/serving: carries (U, S) across calls."""
-
-    def step(carry, x):
-        u_prev, s_prev = carry
-        u, s = lif_step(u_prev, s_prev, x, cfg)
-        return (u, s), s
-
-    (u, s), spikes = jax.lax.scan(step, (u0, s0), x_seq)
-    return spikes, (u, s)
+                        cfg: LIFConfig, site: str = "lif"):
+    """Stateful variant for streaming/serving and temporal tiling: carries
+    (U, S) across calls. Dispatches through the ``lif_state`` registry row,
+    so a ``"pallas"``-backed policy runs the fused stateful SOMA kernel;
+    chunk-by-chunk application matches a single :func:`lif_scan` exactly.
+    """
+    impl = cfg.policy.resolve(site, "lif_state")
+    return _lif_state_kernel(impl, site)(x_seq, u0, s0, cfg, site)
 
 
 def lif_reference_manual_grad(x_seq: jax.Array, g_seq: jax.Array,

@@ -48,8 +48,12 @@ logger = logging.getLogger("repro.execution")
 
 #: The abstract op kinds the model dispatches through (a *site* is a named
 #: instance of one of these, e.g. site "pssa.qkv" has op "linear_bn").
-OPS: tuple[str, ...] = ("lif", "bn", "linear_bn", "attn_qk", "attn_av",
-                        "conv")
+#: "lif_state" is the state-carrying LIF used by streaming/serving and by
+#: the temporally-tiled (``time_chunk``) training scan; it shares the lif
+#: site names, so a per-site override covers both the single-shot and the
+#: tiled path at that site.
+OPS: tuple[str, ...] = ("lif", "lif_state", "bn", "linear_bn", "attn_qk",
+                        "attn_av", "conv")
 
 # Per-backend default implementation for each op. The attention einsums and
 # the tokenizer conv stay on jnp even under backend="pallas" (packed
@@ -57,6 +61,7 @@ OPS: tuple[str, ...] = ("lif", "bn", "linear_bn", "attn_qk", "attn_av",
 # fused tokenizer conv is an open ROADMAP item).
 _DEFAULT_IMPL: dict[tuple[str, str], str] = {
     ("lif", "jnp"): "jnp", ("lif", "pallas"): "pallas",
+    ("lif_state", "jnp"): "jnp", ("lif_state", "pallas"): "pallas",
     ("bn", "jnp"): "jnp", ("bn", "pallas"): "pallas",
     ("linear_bn", "jnp"): "jnp", ("linear_bn", "pallas"): "pallas",
     ("attn_qk", "jnp"): "jnp", ("attn_qk", "pallas"): "jnp",
@@ -229,6 +234,8 @@ def register_kernel(op: str, impl: str) -> Callable:
     can resolve through the same policy):
 
     * ``lif``:       ``fn(x_seq, cfg: LIFConfig, site) -> spikes``
+    * ``lif_state``: ``fn(x_seq, u0, s0, cfg: LIFConfig, site)
+                      -> (spikes, (u, s))``
     * ``bn``:        ``fn(params, state, x, train, momentum, eps, policy,
                       site) -> (y, state)``
     * ``linear_bn``: ``fn(params, state, x, train, policy, site)

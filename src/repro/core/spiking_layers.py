@@ -24,14 +24,30 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from jax.sharding import PartitionSpec as P
+
 from repro.core.backend import fold_rows
 from repro.core.lif import LIFConfig, lif_scan
 from repro.core.policy import (ExecutionPolicy, apply_legacy_exec_flags,
                                get_kernel, policy_from_flags, register_kernel,
                                runtime_fallback)
+from repro.models.common import BATCH, MODEL, shard
 
 Params = dict[str, Any]
 State = dict[str, Any]
+
+#: Activation partition specs for the block-internal constraint points
+#: (``shard`` no-ops without an ambient mesh, so the same code runs in
+#: single-device tests and under the launch mesh). Batch over ("pod",
+#: "data"); Q/K/V, attention-head and MLP-hidden features over "model"; the
+#: residual stream keeps features replicated. See docs/SHARDING.md.
+ACT_SPECS: dict[str, P] = {
+    "block.residual": P(None, BATCH, None, None),     # (T,B,N,D)
+    "pssa.qkv": P(None, BATCH, None, MODEL),          # (T,B,N,D)
+    "attn.scores": P(None, BATCH, MODEL, None, None),  # (T,B,h,N,M)
+    "pssa.out": P(None, BATCH, None, MODEL),          # (T,B,N,D) merged heads
+    "smlp.hidden": P(None, BATCH, None, MODEL),       # (T,B,N,F)
+}
 
 
 def _legacy_policy(policy: ExecutionPolicy | None, backend: str | None,
@@ -321,6 +337,7 @@ def pssa_apply(params: Params, state: State, x: jax.Array, cfg: PSSAConfig,
                              policy=pol, site="pssa.qkv")
     v, s_v = linear_bn_apply(params["v"], state["v"], xs, train=train,
                              policy=pol, site="pssa.qkv")
+    q, k, v = (shard(a, *ACT_SPECS["pssa.qkv"]) for a in (q, k, v))
     qs = lif_scan(q, cfg.lif_cfg, site="pssa.lif")              # eq. 9 (spike Q/K/V)
     ks = lif_scan(k, cfg.lif_cfg, site="pssa.lif")
     vs = lif_scan(v, cfg.lif_cfg, site="pssa.lif")
@@ -329,12 +346,13 @@ def pssa_apply(params: Params, state: State, x: jax.Array, cfg: PSSAConfig,
     if cfg.qk_first:
         attn = get_kernel("attn_qk", pol.resolve("attn_qk", "attn_qk"))(
             qh, kh, pol, "attn_qk")                              # spike counts
+        attn = shard(attn, *ACT_SPECS["attn.scores"])
         out = get_kernel("attn_av", pol.resolve("attn_av", "attn_av"))(
             attn, vh, pol, "attn_av")
     else:  # exact reassociation (no softmax): K^T V first — kv is dense
         kv = jnp.einsum("tbhmd,tbhme->tbhde", kh, vh)
         out = jnp.einsum("tbhnd,tbhde->tbhne", qh, kv)
-    out = _merge_heads(out) * cfg.scale                          # eq. 10 (* s)
+    out = shard(_merge_heads(out), *ACT_SPECS["pssa.out"]) * cfg.scale  # eq. 10
     out_s = lif_scan(out, cfg.lif_cfg, site="pssa.lif")          # SN(...)
     z, s_z = linear_bn_apply(params["z"], state["z"], out_s, train=train,
                              policy=pol, site="pssa.proj")
@@ -376,6 +394,7 @@ def smlp_apply(params: Params, state: State, x: jax.Array, cfg: SMLPConfig,
     xs = lif_scan(x, cfg.lif_cfg, site="smlp.lif")   # pre-activation SN
     h, s_a = linear_bn_apply(params["a"], state["a"], xs, train=train,
                              policy=pol, site="smlp.a")
+    h = shard(h, *ACT_SPECS["smlp.hidden"])
     hs = lif_scan(h, cfg.lif_cfg, site="smlp.lif")
     y, s_b = linear_bn_apply(params["b"], state["b"], hs, train=train,
                              policy=pol, site="smlp.b")
@@ -423,7 +442,7 @@ def init_block(key, cfg: BlockConfig, dtype=jnp.float32):
 def block_apply(params: Params, state: State, x: jax.Array, cfg: BlockConfig,
                 *, train: bool):
     a, s_attn = pssa_apply(params["pssa"], state["pssa"], x, cfg.pssa, train=train)
-    x = x + a                                  # eq. 5 (RES, MS Add)
+    x = shard(x + a, *ACT_SPECS["block.residual"])   # eq. 5 (RES, MS Add)
     m, s_mlp = smlp_apply(params["smlp"], state["smlp"], x, cfg.smlp, train=train)
-    x = x + m                                  # eq. 6 (RES)
+    x = shard(x + m, *ACT_SPECS["block.residual"])   # eq. 6 (RES)
     return x, {"pssa": s_attn, "smlp": s_mlp}

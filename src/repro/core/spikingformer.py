@@ -12,18 +12,20 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Any
+from typing import Any, ClassVar
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
 from repro.core.lif import LIFConfig, lif_scan
 from repro.core.policy import (ExecutionPolicy, apply_legacy_exec_flags,
                                get_kernel, plan_sites, policy_from_flags,
                                register_kernel, warn_deprecated_flags)
-from repro.core.spiking_layers import (BlockConfig, bn_apply, block_apply,
-                                       init_block, init_bn, init_linear,
-                                       linear_apply)
+from repro.core.spiking_layers import (ACT_SPECS, BlockConfig, bn_apply,
+                                       block_apply, init_block, init_bn,
+                                       init_linear, linear_apply)
+from repro.models.common import BATCH, MODEL, shard, spec_is_leaf
 
 Params = dict[str, Any]
 State = dict[str, Any]
@@ -32,6 +34,10 @@ State = dict[str, Any]
 @dataclasses.dataclass(frozen=True)
 class SpikingFormerConfig:
     """Paper Table III defaults: h=8, d=512, T=4, P=14, BS=16."""
+
+    #: Family tag for the unified train-step factory (the LM/audio configs
+    #: carry "lm"/"audio" in the same slot).
+    family: ClassVar[str] = "vision"
 
     num_layers: int = 8
     d_model: int = 512
@@ -47,6 +53,11 @@ class SpikingFormerConfig:
     attn_scale: float = 0.125
     dtype: Any = jnp.float32
     remat: bool = False               # checkpoint each block over the scan
+    # Temporal tiling (the paper's temporal blocking): every LIF scan splits
+    # its T axis into remat'd chunks of this length with the (U, S) carry
+    # threaded across chunk boundaries — stored BPTT residuals scale with
+    # T/time_chunk instead of T, gradients stay exact. None = single-shot.
+    time_chunk: int | None = None
     # Execution policy for every LIF/BN/matmul/attention site; derived
     # configs (Block/PSSA/SMLP/LIF) inherit it. See docs/EXECUTION.md.
     policy: ExecutionPolicy = ExecutionPolicy()
@@ -60,13 +71,15 @@ class SpikingFormerConfig:
 
     @property
     def block(self) -> BlockConfig:
-        return BlockConfig(self.d_model, self.n_heads, self.d_ff, self.lif,
-                           self.qk_first, self.attn_scale, policy=self.policy)
+        return BlockConfig(self.d_model, self.n_heads, self.d_ff,
+                           self.lif_cfg, self.qk_first, self.attn_scale,
+                           policy=self.policy)
 
     @property
     def lif_cfg(self) -> LIFConfig:
-        """Tokenizer-site LIF config with the model policy injected."""
-        return dataclasses.replace(self.lif, policy=self.policy)
+        """LIF config with the model policy + temporal tiling injected."""
+        return dataclasses.replace(self.lif, policy=self.policy,
+                                   time_chunk=self.time_chunk)
 
     def with_policy(self, policy: ExecutionPolicy) -> "SpikingFormerConfig":
         """Same model, different execution policy (params are compatible)."""
@@ -107,15 +120,18 @@ class SpikingFormerConfig:
             ("attn_qk", "attn_qk", head_dim),
             ("attn_av", "attn_av", self.num_tokens),
         ) if self.qk_first else ()
+        # Under temporal tiling the LIF sites dispatch the state-carrying
+        # twin op, so the plan lists (and validates) those rows too.
+        lif_ops = ("lif", "lif_state") if self.time_chunk else ("lif",)
+        lif = lambda site: tuple((site, op, None) for op in lif_ops)  # noqa
         return (
             ("tokenizer.conv", "conv", None),
             ("tokenizer.bn", "bn", None),
-            ("tokenizer.lif", "lif", None),
-            ("pssa.lif", "lif", None),
+        ) + lif("tokenizer.lif") + lif("pssa.lif") + (
             ("pssa.qkv", "linear_bn", self.d_model),
         ) + attn + (
             ("pssa.proj", "linear_bn", self.d_model),
-            ("smlp.lif", "lif", None),
+        ) + lif("smlp.lif") + (
             ("smlp.a", "linear_bn", self.d_model),
             ("smlp.b", "linear_bn", self.d_ff),
         )
@@ -126,9 +142,38 @@ class SpikingFormerConfig:
         fallbacks decided here rather than silently per call."""
         return plan_sites(self.policy, self.execution_site_specs())
 
-    def describe_execution(self) -> str:
-        """The per-site dispatch table (printed by bench_model_table)."""
-        return self.policy.describe(self.execution_site_specs())
+    def describe_execution(self, mesh=None) -> str:
+        """The per-site dispatch table (printed by bench_model_table),
+        followed by the sharding plan: the activation partition specs the
+        model constrains to, and — when ``mesh`` is given — the effective
+        parameter shardings (post sanitize + FSDP) on that mesh."""
+        out = self.policy.describe(self.execution_site_specs())
+        return out + "\n\n" + self.describe_sharding(mesh)
+
+    def describe_sharding(self, mesh=None) -> str:
+        """The sharding half of the execution report (see docs/SHARDING.md).
+
+        Batch shards over the ("pod", "data") mesh axes, d_model/head
+        projections over "model". Without a mesh the table shows the logical
+        specs; with one, the per-leaf parameter placements actually used by
+        ``launch.train.build_spikingformer_state`` on that mesh.
+        """
+        lines = ["# Sharding plan (batch over ('pod','data'), "
+                 "tensor-parallel over 'model')", "activation,spec"]
+        for name, spec in activation_specs(self):
+            lines.append(f"{name},{spec}")
+        if mesh is not None:
+            from repro.launch.specs import spikingformer_structs
+            _, (specs, _) = spikingformer_structs(self, mesh)
+            sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+            lines.append(f"param,spec  (mesh {sizes})")
+            flat = jax.tree_util.tree_flatten_with_path(
+                specs, is_leaf=spec_is_leaf)[0]
+            for path, spec in flat:
+                name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                                for p in path)
+                lines.append(f"{name},{spec}")
+        return "\n".join(lines)
 
     def param_count(self) -> int:
         d, f = self.d_model, self.d_ff
@@ -141,6 +186,108 @@ class SpikingFormerConfig:
             c_in = c_out
         head = self.d_model * self.num_classes + self.num_classes
         return self.num_layers * per_block + tok + head
+
+
+# ---------------------------------------------------------------------------
+# Sharding plan: logical partition specs for params and activations
+# ---------------------------------------------------------------------------
+
+def activation_specs(cfg: SpikingFormerConfig
+                     ) -> tuple[tuple[str, P], ...]:
+    """(name, PartitionSpec) for every activation constraint the model
+    places (the same specs ``shard(...)`` is called with, so this table IS
+    the plan, not a parallel description of it). Activations are (T, B, N,
+    D) unless noted; batch shards over ("pod", "data"), the Q/K/V, head and
+    MLP-hidden projections over "model"; the residual stream keeps features
+    replicated (its D is the sum of row-parallel outputs)."""
+    return (
+        ("images", P(None, BATCH, None, None, None)),     # (T,B,H,W,C)
+        ("tokenizer.stage", P(BATCH, None, None, None)),  # folded (T*B,H,W,C)
+        ("tokenizer.tokens", P(None, BATCH, None, None)),
+        ("block.residual", ACT_SPECS["block.residual"]),
+        ("pssa.qkv", ACT_SPECS["pssa.qkv"]),
+        ("attn.scores", ACT_SPECS["attn.scores"]),        # (T,B,h,N,M)
+        ("pssa.out", ACT_SPECS["pssa.out"]),
+        ("smlp.hidden", ACT_SPECS["smlp.hidden"]),
+        ("head.features", P(BATCH, None)),                # (B, D)
+    )
+
+
+def spikingformer_param_specs(cfg: SpikingFormerConfig):
+    """(param_specs, state_specs) PartitionSpec pytrees matching
+    :func:`init_spikingformer`.
+
+    Tensor-parallel placements mirror the Megatron convention: Q/K/V and
+    SMLP-A column-parallel (output features over "model", with their BN
+    leaves sharded alike), Z-projection and SMLP-B row-parallel (input
+    features over "model", BN replicated). The vmapped block leaves carry a
+    leading L scan axis that stays unsharded (``spikingformer_scan_dims``
+    tells ``apply_fsdp`` to skip it). Tokenizer convs and the head are
+    replicated — FSDP may still shard them over "data"."""
+    rep = P(None)
+    tok_p = [{"conv": {"w": P(None, None, None, None)},
+              "bn": {"gamma": rep, "beta": rep}}
+             for _ in range(cfg.tokenizer_stages)]
+    tok_s = [{"bn": {"mean": rep, "var": rep}} for _ in
+             range(cfg.tokenizer_stages)]
+
+    def linear_bn(w_spec, feat_spec):
+        return ({"linear": {"w": w_spec},
+                 "bn": {"gamma": feat_spec, "beta": feat_spec}},
+                {"bn": {"mean": feat_spec, "var": feat_spec}})
+
+    col_p, col_s = linear_bn(P(None, None, MODEL), P(None, MODEL))
+    row_p, row_s = linear_bn(P(None, MODEL, None), P(None, None))
+    blocks_p = {"pssa": {"q": col_p, "k": col_p, "v": col_p, "z": row_p},
+                "smlp": {"a": col_p, "b": row_p}}
+    blocks_s = {"pssa": {"q": col_s, "k": col_s, "v": col_s, "z": row_s},
+                "smlp": {"a": col_s, "b": row_s}}
+    head = {"w": P(None, None), "b": P(None)}
+    return ({"tokenizer": tok_p, "blocks": blocks_p, "head": head},
+            {"tokenizer": tok_s, "blocks": blocks_s})
+
+
+def lif_residual_accounting(cfg: SpikingFormerConfig, batch: int
+                            ) -> dict[str, int]:
+    """Analytic stored-residual accounting for the LIF sites of one BPTT
+    step (fp32 bytes; the time-chunk memory math of docs/SHARDING.md).
+
+    ``single_shot``: the SOMA path persists (U, S, mask) for all T steps of
+    every LIF site between FP and BP — 3·T·rows elements. ``tiled`` (with
+    ``time_chunk`` set): the remat'd chunk scan stores only the (U, S)
+    carries at the T/time_chunk chunk boundaries plus one transient chunk
+    of (U, S, mask) recomputed during BP — 2·(T/tc)·rows + 3·tc·rows.
+    ``rows`` is the per-time-step element count summed over all LIF sites.
+    """
+    t = cfg.time_steps
+    rows = 0
+    h = w = cfg.image_size
+    for i in range(cfg.tokenizer_stages):
+        c_out = cfg.d_model // (2 ** (cfg.tokenizer_stages - 1 - i))
+        h, w = h // 2, w // 2
+        rows += batch * h * w * c_out
+    # per layer: PSSA scans x, q, k, v, out (5 d-wide) + SMLP scans x
+    # (d-wide) and the hidden (d_ff-wide)
+    rows += cfg.num_layers * batch * cfg.num_tokens * \
+        (6 * cfg.d_model + cfg.d_ff)
+    single = 3 * t * rows * 4
+    tc = cfg.time_chunk or t
+    if not (0 < tc < t) or t % tc != 0:
+        tiled = single                     # degenerate: single-shot scan
+    else:
+        tiled = (2 * (t // tc) + 3 * tc) * rows * 4
+    return {"elems_per_step": rows, "single_shot_bytes": single,
+            "tiled_bytes": tiled}
+
+
+def spikingformer_scan_dims(specs):
+    """Per-leaf count of leading vmapped/scan dims ``apply_fsdp`` must not
+    shard: 1 for the stacked block leaves, 0 elsewhere."""
+    def n_scan(path, _):
+        return 1 if any(getattr(p, "key", None) == "blocks" for p in path) \
+            else 0
+    return jax.tree_util.tree_map_with_path(
+        n_scan, specs, is_leaf=spec_is_leaf)
 
 
 # ---------------------------------------------------------------------------
@@ -185,6 +332,7 @@ def tokenizer_apply(params, state, images, cfg: SpikingFormerConfig, *,
     conv = get_kernel("conv", pol.resolve("tokenizer.conv", "conv"))
     new_states = []
     for p, s in zip(params, state):
+        x = shard(x, BATCH, None, None, None)
         x = conv(p["conv"], x, pol, "tokenizer.conv")
         # BN over (TB,H,W) per channel; LIF scans time, so unfold T.
         y, s_bn = bn_apply(p["bn"], s["bn"], x, train=train,
@@ -224,8 +372,10 @@ def spikingformer_apply(params: Params, state: State, images: jax.Array,
     if images.ndim == 4:  # static dataset: replicate over time (direct coding)
         images = jnp.broadcast_to(images[None],
                                   (cfg.time_steps,) + images.shape)
+    images = shard(images, None, BATCH, None, None, None)
     x, s_tok = tokenizer_apply(params["tokenizer"], state["tokenizer"], images,
                                cfg, train=train)
+    x = shard(x, None, BATCH, None, None)
 
     def layer(x, ps):
         p, s = ps
@@ -236,7 +386,7 @@ def spikingformer_apply(params: Params, state: State, images: jax.Array,
         layer = jax.checkpoint(layer)
     x, s_blocks = jax.lax.scan(layer, x, (params["blocks"], state["blocks"]))
     # eq. 7: GAP over tokens, rate-decode over time, then FC.
-    feat = jnp.mean(x, axis=(0, 2))                      # (B, D)
+    feat = shard(jnp.mean(x, axis=(0, 2)), BATCH, None)   # (B, D)
     logits = linear_apply(params["head"], feat) + params["head"]["b"]
     return logits.astype(jnp.float32), {"tokenizer": s_tok, "blocks": s_blocks}
 
@@ -247,13 +397,22 @@ def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
     return jnp.mean(nll)
 
 
-@partial(jax.jit, static_argnames=("cfg",))
 def spikingformer_loss(params, state, images, labels, cfg: SpikingFormerConfig):
+    """BPTT training loss. Deliberately NOT jitted: it is traced inside the
+    already-jitted train step (a nested jit would re-trace there for
+    nothing). Direct callers wanting a compiled entry point should use
+    :func:`spikingformer_loss_jit`."""
     logits, new_state = spikingformer_apply(params, state, images, cfg,
                                             train=True)
     loss = cross_entropy(logits, labels)
     acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
     return loss, (new_state, {"loss": loss, "accuracy": acc})
+
+
+#: Compiled entry point for direct callers (the train step builds its own
+#: jit around :func:`spikingformer_grad_step` instead).
+spikingformer_loss_jit = partial(jax.jit, static_argnames=("cfg",))(
+    spikingformer_loss)
 
 
 def spikingformer_grad_step(params, state, images, labels,

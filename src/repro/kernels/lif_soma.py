@@ -43,6 +43,24 @@ def _lif_bwd_kernel(g_ref, u_ref, s_ref, mask_ref, dx_ref, *, alpha,
         grad_u_next = grad_u
 
 
+def _lif_bwd_carry_kernel(g_ref, u_ref, s_ref, mask_ref, gu_ref, dx_ref, *,
+                          alpha, grad_scale, time_steps):
+    """GRAD mode with a direct cotangent on the final membrane U_{T-1}.
+
+    Used by the temporally-tiled scan: the next chunk's backward hands back
+    dL/du_last, which seeds the recursion at t = T-1 *additively* (it is a
+    direct dependence on U_{T-1}, not one routed through a later U)."""
+    grad_u_next = jnp.zeros_like(g_ref[0])
+    for t in reversed(range(time_steps)):
+        grad_s = g_ref[t] - alpha * u_ref[t] * grad_u_next
+        grad_u = (grad_u_next * alpha * (1.0 - s_ref[t])
+                  + grad_s * mask_ref[t] * grad_scale)
+        if t == time_steps - 1:
+            grad_u = grad_u + gu_ref[...]
+        dx_ref[t] = grad_u
+        grad_u_next = grad_u
+
+
 def _grid_specs(shape, bm, bd):
     t, m, d = shape
     grid = (pl.cdiv(m, bm), pl.cdiv(d, bd))
@@ -75,16 +93,30 @@ def lif_soma_fwd(x: jax.Array, *, alpha: float = 0.5, th_fire: float = 1.0,
 @functools.partial(jax.jit, static_argnames=(
     "alpha", "grad_scale", "block_m", "block_d", "interpret"))
 def lif_soma_bwd(g: jax.Array, u_seq: jax.Array, spikes: jax.Array,
-                 mask: jax.Array, *, alpha: float = 0.5,
+                 mask: jax.Array, gu_last: jax.Array | None = None, *,
+                 alpha: float = 0.5,
                  grad_scale: float = 1.0, block_m: int = 256,
                  block_d: int = 256, interpret: bool = True):
-    """GRAD: upstream dL/dS (T,M,D) + persisted (U, S, mask) -> dL/dX."""
+    """GRAD: upstream dL/dS (T,M,D) + persisted (U, S, mask) -> dL/dX.
+
+    ``gu_last`` (M, D), when given, is the direct cotangent on the final
+    membrane potential U_{T-1} — the carry handed back by the next temporal
+    tile's backward pass. ``None`` keeps the classic single-shot recursion.
+    """
     t, m, d = g.shape
     bm, bd = min(block_m, m), min(block_d, d)
     grid, spec = _grid_specs(g.shape, bm, bd)
-    kernel = functools.partial(_lif_bwd_kernel, alpha=alpha,
+    if gu_last is None:
+        kernel = functools.partial(_lif_bwd_kernel, alpha=alpha,
+                                   grad_scale=grad_scale, time_steps=t)
+        return pl.pallas_call(
+            kernel, grid=grid, in_specs=[spec] * 4, out_specs=spec,
+            out_shape=jax.ShapeDtypeStruct(g.shape, g.dtype),
+            interpret=interpret)(g, u_seq, spikes, mask)
+    carry_spec = pl.BlockSpec((bm, bd), lambda i, j: (i, j))
+    kernel = functools.partial(_lif_bwd_carry_kernel, alpha=alpha,
                                grad_scale=grad_scale, time_steps=t)
     return pl.pallas_call(
-        kernel, grid=grid, in_specs=[spec] * 4, out_specs=spec,
-        out_shape=jax.ShapeDtypeStruct(g.shape, g.dtype),
-        interpret=interpret)(g, u_seq, spikes, mask)
+        kernel, grid=grid, in_specs=[spec] * 4 + [carry_spec],
+        out_specs=spec, out_shape=jax.ShapeDtypeStruct(g.shape, g.dtype),
+        interpret=interpret)(g, u_seq, spikes, mask, gu_last)

@@ -48,6 +48,57 @@ def _lif_bwd(alpha, th_fire, th_lo, th_hi, grad_scale, interpret, res, g):
 lif_soma_op.defvjp(_lif_fwd, _lif_bwd)
 
 
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def lif_soma_carry_op(x: jax.Array, u0: jax.Array, s0: jax.Array,
+                      alpha: float = 0.5, th_fire: float = 1.0,
+                      th_lo: float = 0.0, th_hi: float = 2.0,
+                      grad_scale: float = 1.0,
+                      interpret: bool | None = None):
+    """State-carrying fused LIF over (T, M, D): the temporal-tile variant.
+
+    Starts from the carried membrane/spike state ``(u0, s0)`` (each (M, D))
+    instead of rest and returns ``(spikes, u_last, s_last)`` so the next
+    tile can continue the recursion. The initial state folds into the first
+    input step (eq. 11: U_1 = alpha * u0 * (1 - s0) + X_1), so the SOMA
+    kernel itself is unchanged; the backward seeds the GRAD recursion with
+    the incoming dL/du_last carry cotangent and emits exact (du0, ds0).
+    """
+    x = x.at[0].add(alpha * u0 * (1.0 - s0))
+    s, u, _ = lif_soma.lif_soma_fwd(x, alpha=alpha, th_fire=th_fire,
+                                    th_lo=th_lo, th_hi=th_hi,
+                                    interpret=resolve_interpret(interpret))
+    return s, u[-1], s[-1]
+
+
+def _lif_carry_fwd(x, u0, s0, alpha, th_fire, th_lo, th_hi, grad_scale,
+                   interpret):
+    x = x.at[0].add(alpha * u0 * (1.0 - s0))
+    s, u, mask = lif_soma.lif_soma_fwd(x, alpha=alpha, th_fire=th_fire,
+                                       th_lo=th_lo, th_hi=th_hi,
+                                       interpret=resolve_interpret(interpret))
+    return (s, u[-1], s[-1]), (u, s, mask, u0, s0)
+
+
+def _lif_carry_bwd(alpha, th_fire, th_lo, th_hi, grad_scale, interpret, res,
+                   g):
+    u, s, mask, u0, s0 = res
+    g_s, g_u_last, g_s_last = g
+    # s_last IS spikes[-1]: its cotangent joins the per-step spike cotangent.
+    g_eff = g_s.at[-1].add(g_s_last)
+    dx = lif_soma.lif_soma_bwd(g_eff, u, s, mask, g_u_last, alpha=alpha,
+                               grad_scale=grad_scale,
+                               interpret=resolve_interpret(interpret))
+    # U_1 = alpha * u0 * (1 - s0) + X_1 and dU_1/dX_1 = 1, so dL/dU_1 = dx[0]
+    # and the carried-state cotangents follow by the product rule (the reset
+    # path stays attached, matching the jnp scan).
+    g_u0 = dx[0] * alpha * (1.0 - s0)
+    g_s0 = -dx[0] * alpha * u0
+    return dx, g_u0, g_s0
+
+
+lif_soma_carry_op.defvjp(_lif_carry_fwd, _lif_carry_bwd)
+
+
 @partial(jax.custom_vjp, nondiff_argnums=(3, 4))
 def bn_train_op(x: jax.Array, gamma: jax.Array, beta: jax.Array,
                 eps: float = 1e-5, interpret: bool | None = None):

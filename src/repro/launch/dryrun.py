@@ -22,7 +22,7 @@ import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.registry import ASSIGNED, LONG_CONTEXT, get_config
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_production_mesh, use_mesh
 from repro.launch.specs import SHAPES, input_specs
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "../../../experiments",
@@ -107,11 +107,16 @@ def _lower_compile(cfg, shape_name, mesh):
         lambda s: NamedSharding(mesh, s if s is not None else P()),
         specs, is_leaf=lambda x: isinstance(x, P) or x is None)
     kind = SHAPES[shape_name].kind
-    # realistic buffer donation: train donates params+opt state, decode
-    # donates the KV cache (in-place update) — halves their residency.
-    donate = (0, 1) if kind == "train" else ((1,) if kind == "decode"
-                                             else ())
-    with jax.set_mesh(mesh):
+    # realistic buffer donation: train donates params+opt state (vision
+    # adds the BN-state tree: args are (params, state, opt, images,
+    # labels)), decode donates the KV cache (in-place update) — halves
+    # their residency.
+    if kind == "train":
+        donate = (0, 1, 2) if getattr(cfg, "family", None) == "vision" \
+            else (0, 1)
+    else:
+        donate = (1,) if kind == "decode" else ()
+    with use_mesh(mesh):
         lowered = jax.jit(fn, in_shardings=shardings,
                           donate_argnums=donate).lower(*structs)
         compiled = lowered.compile()

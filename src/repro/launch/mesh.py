@@ -11,19 +11,39 @@ from __future__ import annotations
 import jax
 from jax.sharding import PartitionSpec as P
 
+from repro.models.common import spec_is_leaf
+
+
+def _make_mesh(shape, axes):
+    """jax.make_mesh across jax versions: axis_types landed after 0.4.x."""
+    try:
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    except (AttributeError, TypeError):
+        return jax.make_mesh(shape, axes)
+
+
+def use_mesh(mesh):
+    """Context manager activating ``mesh`` for sharding-constraint
+    resolution: ``jax.set_mesh`` on current jax, the legacy ``with mesh:``
+    context on releases that predate it (a ``Mesh`` is itself a context
+    manager there)."""
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    return mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_test_mesh(data: int = 1, model: int = 1):
     """Small mesh for CPU tests (1 device => (1, 1))."""
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return _make_mesh((data, model), ("data", "model"))
 
 
 def batch_axes(mesh) -> tuple[str, ...]:
@@ -31,15 +51,21 @@ def batch_axes(mesh) -> tuple[str, ...]:
 
 
 def apply_fsdp(specs, shapes, mesh, min_elems: int = 1 << 20,
-               axis: str = "data"):
+               axis: str = "data", scan_dims=None):
     """ZeRO-3-style weight sharding: every large leaf gets one extra free dim
     sharded over the data axis (XLA all-gathers it just-in-time per layer).
-    Cuts parameter + Adam-moment residency by the data-axis size."""
+    Cuts parameter + Adam-moment residency by the data-axis size.
+
+    ``scan_dims`` (optional) is a pytree of ints matching ``specs``: the
+    number of leading scan/vmap dims per leaf that must never be sharded —
+    the Spikingformer's stacked block leaves carry a leading L axis that is
+    scanned over depth, and slicing it per layer would turn every scan step
+    into a gather."""
     if axis not in mesh.axis_names:
         return specs
     size = dict(zip(mesh.axis_names, mesh.axis_sizes))[axis]
 
-    def fix(spec, leaf):
+    def fix(spec, leaf, n_scan=0):
         import numpy as np
         shape = leaf.shape
         if spec is None or int(np.prod(shape)) < min_elems:
@@ -52,15 +78,16 @@ def apply_fsdp(specs, shapes, mesh, min_elems: int = 1 << 20,
         # choose the largest unsharded, divisible dim
         best, best_dim = -1, -1
         for i, (ax, d) in enumerate(zip(cur, shape)):
-            if ax is None and d % size == 0 and d > best:
+            if i >= n_scan and ax is None and d % size == 0 and d > best:
                 best, best_dim = d, i
         if best_dim < 0:
             return spec
         cur[best_dim] = axis
         return P(*cur)
 
-    return jax.tree.map(fix, specs, shapes,
-                        is_leaf=lambda x: isinstance(x, P) or x is None)
+    if scan_dims is None:
+        return jax.tree.map(fix, specs, shapes, is_leaf=spec_is_leaf)
+    return jax.tree.map(fix, specs, shapes, scan_dims, is_leaf=spec_is_leaf)
 
 
 def sanitize_specs(specs, shapes, mesh):
@@ -112,5 +139,4 @@ def sanitize_specs(specs, shapes, mesh):
 
     return jax.tree.map(
         lambda s, sh: fix(s, sh.shape),
-        specs, shapes,
-        is_leaf=lambda x: isinstance(x, P) or x is None)
+        specs, shapes, is_leaf=spec_is_leaf)

@@ -26,7 +26,7 @@ from repro.configs.registry import get_config
 from repro.launch.dryrun import (HBM_BW, ICI_BW, PEAK_FLOPS, _costed_cfg,
                                  _cost_unit, _measure, collective_bytes,
                                  model_flops)
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_production_mesh, use_mesh
 from repro.launch.specs import input_specs
 
 OUT = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "..",
@@ -157,7 +157,7 @@ def measure_spiking(cfg, mesh, global_batch: int = 2048) -> dict:
         return jax.grad(lambda p: spikingformer_loss(
             p, state, images, labels, cfg)[0])(params)
 
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         lowered = jax.jit(loss_fn, in_shardings=(
             shardings[0], shardings[1], img_sh, lab_sh)).lower(
             p_struct[0], p_struct[1], img, lab)
@@ -199,7 +199,7 @@ def _measure_spiking_unrolled(cfg, mesh, global_batch):
         return jax.grad(lambda p: spikingformer_loss(
             p, state, images, labels, cfg)[0])(params)
 
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         compiled = jax.jit(loss_fn).lower(
             p_struct[0], p_struct[1],
             jax.ShapeDtypeStruct(img.shape, img.dtype,

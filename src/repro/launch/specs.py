@@ -54,6 +54,51 @@ def param_structs(cfg: ArchConfig):
     return structs, specs_box["specs"]
 
 
+def spikingformer_structs(cfg, mesh, fsdp_min_elems: int = 1 << 20):
+    """Spikingformer (params, bn-state) structs + effective mesh specs.
+
+    The single source of the vision sharding plan: logical specs from
+    ``spikingformer_param_specs`` are sanitized against the mesh and FSDP'd
+    over "data" (the stacked block leaves keep their leading L scan axis
+    unsharded via ``spikingformer_scan_dims``). Used by
+    ``launch.train.build_spikingformer_state``, the vision dry-run cell and
+    ``SpikingFormerConfig.describe_execution(mesh)``.
+    """
+    from repro.core.spikingformer import (init_spikingformer,
+                                          spikingformer_param_specs,
+                                          spikingformer_scan_dims)
+    from repro.launch.mesh import apply_fsdp, sanitize_specs
+
+    p_struct, s_struct = jax.eval_shape(
+        lambda k: init_spikingformer(k, cfg), jax.random.PRNGKey(0))
+    p_specs, s_specs = spikingformer_param_specs(cfg)
+    p_specs = sanitize_specs(p_specs, p_struct, mesh)
+    p_specs = apply_fsdp(p_specs, p_struct, mesh, min_elems=fsdp_min_elems,
+                         scan_dims=spikingformer_scan_dims(p_specs))
+    s_specs = sanitize_specs(s_specs, s_struct, mesh)
+    return (p_struct, s_struct), (p_specs, s_specs)
+
+
+def _vision_input_specs(cfg, sh: ShapeSpec, mesh, ba):
+    """(fn, args_structs, args_specs) for a Spikingformer train cell."""
+    from repro.train.loop import make_train_step
+    from repro.train.optimizer import OptimizerConfig
+    if sh.kind != "train":
+        raise ValueError(
+            f"vision cells are train-only (shape kind {sh.kind!r})")
+    (p_struct, s_struct), (p_specs, s_specs) = spikingformer_structs(cfg,
+                                                                     mesh)
+    o_struct, o_specs = opt_structs(p_struct, p_specs)
+    b = sh.batch
+    images = SDS((b, cfg.image_size, cfg.image_size, cfg.in_channels),
+                 jnp.float32)
+    labels = SDS((b,), jnp.int32)
+    fn = make_train_step(cfg, OptimizerConfig(), mesh=mesh)
+    return fn, (p_struct, s_struct, o_struct, images, labels), \
+        (p_specs, s_specs, o_specs, P(ba or None, None, None, None),
+         P(ba or None))
+
+
 def opt_structs(params_struct, params_specs):
     m = jax.tree.map(lambda s: SDS(s.shape, s.dtype), params_struct)
     v = jax.tree.map(lambda s: SDS(s.shape, s.dtype), params_struct)
@@ -140,6 +185,8 @@ def input_specs(cfg: ArchConfig, shape_name: str, mesh,
     from repro.launch.mesh import sanitize_specs
     sh = SHAPES[shape_name]
     ba = mesh_batch_axes(mesh)
+    if getattr(cfg, "family", None) == "vision":
+        return _vision_input_specs(cfg, sh, mesh, ba)
     p_struct, p_specs = param_structs(cfg)
     p_specs = sanitize_specs(p_specs, p_struct, mesh)
     # 2D weight sharding over (data, model): always for training (ZeRO-3);

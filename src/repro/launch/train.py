@@ -1,12 +1,17 @@
-"""End-to-end training driver.
+"""End-to-end training driver for every model family.
 
 Runs real steps on the available devices (CPU smoke / TPU slice alike):
 builds the mesh, initializes sharded params + optimizer, streams the
 synthetic data pipeline, checkpoints asynchronously, monitors stragglers,
-and restarts from the latest checkpoint after preemption.
+and restarts from the latest checkpoint after preemption. The Spikingformer
+vision path runs through the same machinery (mesh, FSDP, ``place_batch``,
+checkpointing) as the LM path — one launch subsystem, one train-step
+factory.
 
   PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b --reduced \
       --steps 200 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+  PYTHONPATH=src python -m repro.launch.train --arch spikingformer-tiny \
+      --steps 100 --batch 16 --policy pallas --time-chunk 2
 """
 from __future__ import annotations
 
@@ -19,10 +24,11 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.registry import get_config, reduced
 from repro.launch.mesh import (apply_fsdp, batch_axes, make_test_mesh,
-                               sanitize_specs)
-from repro.models.common import split_tree
+                               sanitize_specs, use_mesh)
+from repro.models.common import spec_is_leaf, split_tree
 from repro.train import checkpoint as ckpt
-from repro.train.data import DataConfig, SyntheticLM, place_batch
+from repro.train.data import (DataConfig, SyntheticLM, SyntheticVision,
+                              VisionDataConfig, place_batch)
 from repro.train.loop import make_train_step
 from repro.train.optimizer import OptimizerConfig, init_opt_state
 from repro.train.resilience import PreemptionGuard, StragglerMonitor
@@ -47,20 +53,152 @@ def build_state(cfg, mesh, opt_cfg, seed: int = 0):
     specs = apply_fsdp(specs, struct, mesh)
     shardings = jax.tree.map(
         lambda s: NamedSharding(mesh, s if s is not None else P()),
-        specs, is_leaf=lambda x: isinstance(x, P) or x is None)
-    with jax.set_mesh(mesh):
+        specs, is_leaf=spec_is_leaf)
+    with use_mesh(mesh):
         params = jax.jit(make, out_shardings=shardings)(
             jax.random.PRNGKey(seed))
     opt_state = init_opt_state(params)
     return params, opt_state, specs
 
 
-def train(cfg, *, steps: int, global_batch: int, seq_len: int,
-          ckpt_dir: str | None, mesh=None, microbatches: int = 1,
-          log_every: int = 10, ckpt_every: int = 100, seed: int = 0,
-          data_vocab: int | None = None, lr: float = 3e-4):
+def build_spikingformer_state(cfg, mesh, opt_cfg, seed: int = 0,
+                              fsdp_min_elems: int = 1 << 20):
+    """Init Spikingformer params + BN state + opt state into their mesh
+    shardings (the vision twin of :func:`build_state`)."""
+    from repro.core.spikingformer import init_spikingformer
+    from repro.launch.specs import spikingformer_structs
+
+    _, (p_specs, s_specs) = spikingformer_structs(cfg, mesh, fsdp_min_elems)
+    to_shardings = lambda specs: jax.tree.map(  # noqa: E731
+        lambda s: NamedSharding(mesh, s if s is not None else P()),
+        specs, is_leaf=spec_is_leaf)
+    with use_mesh(mesh):
+        params, state = jax.jit(
+            lambda k: init_spikingformer(k, cfg),
+            out_shardings=(to_shardings(p_specs), to_shardings(s_specs)))(
+            jax.random.PRNGKey(seed))
+        opt_state = init_opt_state(params)
+    return params, state, opt_state, (p_specs, s_specs)
+
+
+def _drive(mesh, *, start: int, steps: int, step_once, save, log_line,
+           log_every: int, ckpt_every: int, ckpt_dir: str | None):
+    """Shared driver scaffolding for every family: straggler monitor,
+    preemption guard, checkpoint cadence, and the final async-save join
+    (the last write must land before a restart scans ``latest_step``).
+
+    ``step_once(step) -> metrics`` advances the caller's model state (held
+    in a closure); ``save(step)`` persists it, returning the writer thread
+    when asynchronous; ``log_line(step, metrics)`` formats the progress
+    line. Returns the per-step loss history.
+    """
+    monitor = StragglerMonitor(
+        on_straggler=lambda dt, med: print(
+            f"[straggler] step took {dt:.3f}s (median {med:.3f}s)"))
+    guard = PreemptionGuard().install()
+    history = []
+    pending_save = None
+
+    with use_mesh(mesh):
+        for step in range(start, steps):
+            monitor.step_start()
+            metrics = step_once(step)
+            monitor.step_end()
+            history.append(float(metrics["loss"]))
+            if step % log_every == 0 or step == steps - 1:
+                print(log_line(step, metrics), flush=True)
+            if ckpt_dir and ((step + 1) % ckpt_every == 0
+                             or guard.requested):
+                pending_save = save(step + 1)
+                if guard.requested:
+                    print("[preempt] checkpoint saved, exiting")
+                    break
+    if pending_save is not None:
+        pending_save.join(timeout=120)
+        if pending_save.is_alive():
+            print("[ckpt] WARNING: final async checkpoint write still "
+                  "running after 120s — a restart may resume from an "
+                  "older step", flush=True)
+    return history
+
+
+def train_vision(cfg, *, steps: int, global_batch: int,
+                 ckpt_dir: str | None, mesh=None, microbatches: int = 1,
+                 log_every: int = 10, ckpt_every: int = 100, seed: int = 0,
+                 lr: float = 2e-3):
+    """Mesh-sharded Spikingformer BPTT training (the vision twin of
+    :func:`train`): batch shards over ("pod", "data"), projections/heads
+    over "model", FSDP'd weights, synthetic quadrant-blob data through
+    ``place_batch``, checkpointing (params + BN state + optimizer) with
+    elastic restore."""
     mesh = mesh or make_test_mesh(jax.device_count(), 1)
-    opt_cfg = OptimizerConfig(lr=lr, total_steps=steps,
+    opt_cfg = OptimizerConfig(lr=lr, total_steps=steps, weight_decay=0.01,
+                              warmup_steps=max(steps // 20, 5))
+    params, state, opt_state, (p_specs, s_specs) = build_spikingformer_state(
+        cfg, mesh, opt_cfg, seed)
+    from repro.train.optimizer import init_opt_specs
+    specs = {"params": p_specs, "state": s_specs,
+             "opt": init_opt_specs(p_specs)}
+
+    start = 0
+    if ckpt_dir:
+        latest = ckpt.latest_step(ckpt_dir)
+        if latest is not None:
+            print(f"[restore] step {latest} from {ckpt_dir}")
+            tree = {"params": params, "state": state, "opt": opt_state}
+            tree = ckpt.restore_checkpoint(ckpt_dir, latest, tree, mesh,
+                                           specs)
+            params, state, opt_state = (tree["params"], tree["state"],
+                                        tree["opt"])
+            start = latest
+
+    data = SyntheticVision(VisionDataConfig(
+        image_size=cfg.image_size, num_classes=cfg.num_classes,
+        global_batch=global_batch, channels=cfg.in_channels, seed=seed))
+    # microbatches != 1 raises in the factory (BN stats are per-global-batch)
+    step_fn = make_train_step(cfg, opt_cfg, microbatches, mesh=mesh)
+    jit_step = jax.jit(step_fn, donate_argnums=(0, 1, 2))
+
+    def step_once(step):
+        nonlocal params, state, opt_state
+        batch = place_batch(data.batch(step), mesh)
+        params, state, opt_state, metrics = jit_step(
+            params, state, opt_state, batch["images"], batch["labels"])
+        return metrics
+
+    def save(step):
+        return ckpt.save_checkpoint(
+            ckpt_dir, step,
+            {"params": params, "state": state, "opt": opt_state},
+            specs, async_save=True)
+
+    def log_line(step, m):
+        return (f"step {step:5d} loss {float(m['loss']):.4f} "
+                f"acc {float(m['accuracy']):.2f} "
+                f"gnorm {float(m['grad_norm']):.3f} "
+                f"lr {float(m['lr']):.2e}")
+
+    history = _drive(mesh, start=start, steps=steps, step_once=step_once,
+                     save=save, log_line=log_line, log_every=log_every,
+                     ckpt_every=ckpt_every, ckpt_dir=ckpt_dir)
+    return params, history
+
+
+def train(cfg, *, steps: int, global_batch: int, seq_len: int = 128,
+          ckpt_dir: str | None = None, mesh=None, microbatches: int = 1,
+          log_every: int = 10, ckpt_every: int = 100, seed: int = 0,
+          data_vocab: int | None = None, lr: float | None = None):
+    """Family dispatch: ``lr=None`` picks the per-family default (3e-4 LM,
+    2e-3 for the small vision models)."""
+    if getattr(cfg, "family", None) == "vision":
+        return train_vision(cfg, steps=steps, global_batch=global_batch,
+                            ckpt_dir=ckpt_dir, mesh=mesh,
+                            microbatches=microbatches, log_every=log_every,
+                            ckpt_every=ckpt_every, seed=seed,
+                            lr=lr if lr is not None else 2e-3)
+    mesh = mesh or make_test_mesh(jax.device_count(), 1)
+    opt_cfg = OptimizerConfig(lr=lr if lr is not None else 3e-4,
+                              total_steps=steps,
                               warmup_steps=max(steps // 20, 5))
     params, opt_state, specs = build_state(cfg, mesh, opt_cfg, seed)
 
@@ -79,40 +217,69 @@ def train(cfg, *, steps: int, global_batch: int, seq_len: int,
     step_fn = make_train_step(cfg, opt_cfg, microbatches)
     jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
 
-    monitor = StragglerMonitor(
-        on_straggler=lambda dt, med: print(
-            f"[straggler] step took {dt:.3f}s (median {med:.3f}s)"))
-    guard = PreemptionGuard().install()
-    history = []
+    def step_once(step):
+        nonlocal params, opt_state
+        batch = place_batch(data.batch(step), mesh)
+        if cfg.family == "audio":
+            bsz = batch["tokens"].shape[0]
+            batch["frames"] = jnp.zeros(
+                (bsz, cfg.encoder_seq, cfg.d_model), cfg.dtype)
+        if cfg.vlm_stub:
+            bsz, s = batch["tokens"].shape
+            batch["patch_embeds"] = jnp.zeros((bsz, s, cfg.d_model),
+                                              cfg.dtype)
+            batch["patch_mask"] = jnp.zeros((bsz, s), bool)
+        params, opt_state, metrics = jit_step(params, opt_state, batch)
+        return metrics
 
-    with jax.set_mesh(mesh):
-        for step in range(start, steps):
-            monitor.step_start()
-            batch = place_batch(data.batch(step), mesh)
-            if cfg.family == "audio":
-                bsz = batch["tokens"].shape[0]
-                batch["frames"] = jnp.zeros(
-                    (bsz, cfg.encoder_seq, cfg.d_model), cfg.dtype)
-            if cfg.vlm_stub:
-                bsz, s = batch["tokens"].shape
-                batch["patch_embeds"] = jnp.zeros((bsz, s, cfg.d_model),
-                                                  cfg.dtype)
-                batch["patch_mask"] = jnp.zeros((bsz, s), bool)
-            params, opt_state, metrics = jit_step(params, opt_state, batch)
-            monitor.step_end()
-            history.append(float(metrics["loss"]))
-            if step % log_every == 0 or step == steps - 1:
-                print(f"step {step:5d} loss {float(metrics['loss']):.4f} "
-                      f"gnorm {float(metrics['grad_norm']):.3f} "
-                      f"lr {float(metrics['lr']):.2e}", flush=True)
-            if ckpt_dir and ((step + 1) % ckpt_every == 0
-                             or guard.requested):
-                ckpt.save_checkpoint(ckpt_dir, step + 1, params, specs,
-                                     async_save=True)
-                if guard.requested:
-                    print("[preempt] checkpoint saved, exiting")
-                    break
+    def save(step):
+        return ckpt.save_checkpoint(ckpt_dir, step, params, specs,
+                                    async_save=True)
+
+    def log_line(step, m):
+        return (f"step {step:5d} loss {float(m['loss']):.4f} "
+                f"gnorm {float(m['grad_norm']):.3f} "
+                f"lr {float(m['lr']):.2e}")
+
+    history = _drive(mesh, start=start, steps=steps, step_once=step_once,
+                     save=save, log_line=log_line, log_every=log_every,
+                     ckpt_every=ckpt_every, ckpt_dir=ckpt_dir)
     return params, history
+
+
+def _resolve_config(args):
+    """LM/audio registry first; spikingformer preset names (optionally with
+    an ``@<policy>`` suffix) route to the vision path. Flags that only
+    exist for the other family are rejected, never silently dropped."""
+    try:
+        cfg = get_config(args.arch)
+    except KeyError:
+        from repro.configs.registry import list_configs
+        from repro.configs.spikingformer import (get_spikingformer_config,
+                                                 list_spikingformer_configs)
+        from repro.core.policy import named_policy
+        if args.reduced:
+            raise SystemExit("--reduced applies to LM/audio archs only; "
+                             "pick a smaller spikingformer preset instead")
+        if args.data_vocab is not None or args.seq is not None:
+            raise SystemExit("--data-vocab/--seq apply to LM/audio archs "
+                             "only (the vision data stream is sized by the "
+                             "preset's image_size/num_classes)")
+        try:
+            return get_spikingformer_config(
+                args.arch,
+                policy=named_policy(args.policy) if args.policy else None,
+                time_chunk=args.time_chunk)
+        except KeyError:
+            raise SystemExit(
+                f"unknown --arch {args.arch!r}; LM/audio: {list_configs()}; "
+                f"vision: {list_spikingformer_configs()}") from None
+    if args.policy or args.time_chunk:
+        raise SystemExit("--policy/--time-chunk apply to spikingformer "
+                         f"archs only, not {args.arch!r}")
+    if args.reduced:
+        cfg = reduced(cfg)
+    return cfg
 
 
 def main() -> None:
@@ -121,16 +288,20 @@ def main() -> None:
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--seq", type=int, default=None,
+                    help="LM sequence length (default 128)")
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--data-vocab", type=int, default=None)
+    ap.add_argument("--policy", default=None,
+                    help="execution policy preset for spikingformer archs")
+    ap.add_argument("--time-chunk", type=int, default=None,
+                    help="temporal tile length for spikingformer BPTT")
     args = ap.parse_args()
-    cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = reduced(cfg)
+    cfg = _resolve_config(args)
     _, history = train(cfg, steps=args.steps, global_batch=args.batch,
-                       seq_len=args.seq, ckpt_dir=args.ckpt_dir,
+                       seq_len=args.seq if args.seq is not None else 128,
+                       ckpt_dir=args.ckpt_dir,
                        microbatches=args.microbatches,
                        data_vocab=args.data_vocab)
     print(f"final loss {history[-1]:.4f} (from {history[0]:.4f})")

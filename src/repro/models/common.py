@@ -39,6 +39,13 @@ def is_leaf(x) -> bool:
     return isinstance(x, Leaf)
 
 
+def spec_is_leaf(x) -> bool:
+    """Pytree leaf predicate for PartitionSpec trees: a spec leaf is a
+    ``PartitionSpec`` or ``None`` (replicated). Shared by every spec-tree
+    transform so the definition cannot drift between copies."""
+    return isinstance(x, P) or x is None
+
+
 def split_tree(aug: Any) -> tuple[Any, Any]:
     """Augmented tree -> (params, specs)."""
     params = jax.tree.map(lambda l: l.value, aug, is_leaf=is_leaf)
@@ -55,6 +62,28 @@ def stack_layer_trees(augs: list[Any]) -> Any:
     return jax.tree.map(stack, *augs, is_leaf=is_leaf)
 
 
+def _ambient_mesh():
+    """The mesh activated for sharding-constraint resolution, or None.
+
+    Current jax: ``jax.set_mesh`` -> ``get_abstract_mesh``. Older releases
+    (pre ``set_mesh``): the legacy ``with mesh:`` context, visible through
+    ``thread_resources.env.physical_mesh``."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()  # type: ignore[attr-defined]
+        if mesh is not None and not mesh.empty:
+            return mesh
+    except Exception:
+        pass
+    try:
+        from jax._src.mesh import thread_resources
+        mesh = thread_resources.env.physical_mesh
+        if mesh is not None and not mesh.empty:
+            return mesh
+    except Exception:
+        pass
+    return None
+
+
 def shard(x: jax.Array, *spec) -> jax.Array:
     """Sharding constraint that no-ops when no mesh is in context (so the
     same model code runs in single-device tests and under the prod mesh).
@@ -62,7 +91,7 @@ def shard(x: jax.Array, *spec) -> jax.Array:
     are axes whose dim does not divide evenly (uneven GSPMD shardings
     round-trip poorly)."""
     try:
-        mesh = jax.sharding.get_abstract_mesh()  # type: ignore[attr-defined]
+        mesh = _ambient_mesh()
         names = set(mesh.axis_names) if mesh is not None else set()
         sizes = dict(zip(mesh.axis_names, mesh.axis_sizes)) if names else {}
     except Exception:
@@ -119,8 +148,8 @@ def shard_batch(x: jax.Array, *rest) -> jax.Array:
 def mesh_axis_size(name: str) -> int | None:
     """Size of a mesh axis in the ambient (trace-time) mesh, else None."""
     try:
-        mesh = jax.sharding.get_abstract_mesh()
-        if mesh is None or mesh.empty:
+        mesh = _ambient_mesh()
+        if mesh is None:
             return None
         sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
         return sizes.get(name)

@@ -25,14 +25,24 @@ import jax.numpy as jnp
 import numpy as np
 
 
-def _flatten_with_paths(tree: Any) -> list[tuple[str, Any]]:
-    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+def _flatten_with_paths(tree: Any, *, none_is_leaf: bool = False
+                        ) -> list[tuple[str, Any]]:
+    is_leaf = (lambda x: x is None) if none_is_leaf else None
+    flat = jax.tree_util.tree_flatten_with_path(tree, is_leaf=is_leaf)[0]
     out = []
     for path, leaf in flat:
         name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
                         for p in path)
         out.append((name, leaf))
     return out
+
+
+def _spec_map(specs: Any) -> dict[str, Any]:
+    """Name -> spec lookup. Specs flatten with ``None`` kept as a leaf
+    (``None`` means "replicated" here, it must not vanish as an empty
+    subtree and shift the alignment with the value leaves)."""
+    return {name: spec
+            for name, spec in _flatten_with_paths(specs, none_is_leaf=True)}
 
 
 def save_checkpoint(directory: str, step: int, tree: Any,
@@ -45,7 +55,7 @@ def save_checkpoint(directory: str, step: int, tree: Any,
                    for name, leaf in _flatten_with_paths(tree)]
     spec_map = {}
     if specs is not None:
-        for name, spec in _flatten_with_paths(specs):
+        for name, spec in _spec_map(specs).items():
             spec_map[name] = [list(ax) if isinstance(ax, tuple) else ax
                               for ax in (spec or [])]
 
@@ -92,22 +102,30 @@ def latest_step(directory: str) -> int | None:
 
 def restore_checkpoint(directory: str, step: int, like: Any,
                        mesh=None, specs: Any | None = None) -> Any:
-    """Restore into the structure of ``like``. If ``mesh``+``specs`` are
-    given, leaves are placed with the corresponding NamedSharding resolved
-    against the (possibly different — elastic) mesh."""
+    """Restore into the structure of ``like``. If a ``mesh`` is given,
+    leaves are placed with the corresponding NamedSharding resolved against
+    the (possibly different — elastic) mesh: from ``specs`` when supplied,
+    else from the *logical* specs stored in the checkpoint's index (so a
+    restore is host-count- and mesh-agnostic without the writer's spec tree
+    in hand). Specs are matched to leaves by path name, never by flatten
+    order, so ``None`` (replicated) spec leaves cannot shift alignment."""
     from jax.sharding import NamedSharding, PartitionSpec as P
 
     path = os.path.join(directory, f"step_{step:08d}")
     with open(os.path.join(path, "index.json")) as f:
         index = json.load(f)
 
-    names = [name for name, _ in _flatten_with_paths(like)]
-    spec_leaves = [s for _, s in _flatten_with_paths(specs)] \
-        if specs is not None else [None] * len(names)
+    if specs is not None:
+        spec_map = _spec_map(specs)
+    else:
+        spec_map = {name: [tuple(ax) if isinstance(ax, list) else ax
+                           for ax in spec] or None
+                    for name, spec in index.get("specs", {}).items()}
     loaded = []
     axis_names = set(mesh.axis_names) if mesh is not None else set()
-    for name, spec in zip(names, spec_leaves):
+    for name, _ in _flatten_with_paths(like):
         arr = np.load(os.path.join(path, index["leaves"][name]["file"]))
+        spec = spec_map.get(name)
         if mesh is not None and spec is not None:
             def keep_ax(ax):
                 if isinstance(ax, tuple):
@@ -116,6 +134,8 @@ def restore_checkpoint(directory: str, step: int, like: Any,
                 return ax if (ax is None or ax in axis_names) else None
             resolved = P(*(keep_ax(ax) for ax in spec))
             loaded.append(jax.device_put(arr, NamedSharding(mesh, resolved)))
+        elif mesh is not None:
+            loaded.append(jax.device_put(arr, NamedSharding(mesh, P())))
         else:
             loaded.append(jnp.asarray(arr))
     tdef = jax.tree_util.tree_structure(like)

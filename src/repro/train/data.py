@@ -60,6 +60,54 @@ class SyntheticLM:
             step += 1
 
 
+@dataclasses.dataclass(frozen=True)
+class VisionDataConfig:
+    image_size: int
+    num_classes: int
+    global_batch: int
+    channels: int = 3
+    seed: int = 1234
+
+
+class SyntheticVision:
+    """Deterministic quadrant-blob classification stream (learnable).
+
+    Each image is Gaussian noise plus a bright blob in one of four
+    quadrants; the label is the quadrant. A ~1M-param Spikingformer drives
+    the loss well below ln(4) within ~100 steps (used by
+    examples/train_spikingformer.py and the vision launch driver).
+    Host-shardable exactly like :class:`SyntheticLM`: each host generates
+    only its slice of the global batch, keyed by (seed, step, host_index).
+    """
+
+    def __init__(self, cfg: VisionDataConfig):
+        self.cfg = cfg
+
+    def batch(self, step: int, host_index: int = 0,
+              host_count: int = 1) -> dict[str, np.ndarray]:
+        cfg = self.cfg
+        local = cfg.global_batch // host_count
+        size = cfg.image_size
+        rng = np.random.default_rng((cfg.seed, step, host_index))
+        labels = rng.integers(0, min(4, cfg.num_classes),
+                              size=local).astype(np.int32)
+        imgs = rng.normal(0, 0.1, size=(local, size, size,
+                                        cfg.channels)).astype(np.float32)
+        half = size // 2
+        for i, lab in enumerate(labels):
+            y0 = (int(lab) // 2) * half
+            x0 = (int(lab) % 2) * half
+            imgs[i, y0:y0 + half, x0:x0 + half] += 1.0
+        return {"images": imgs, "labels": labels}
+
+    def iterator(self, start_step: int = 0, host_index: int = 0,
+                 host_count: int = 1) -> Iterator[dict[str, np.ndarray]]:
+        step = start_step
+        while True:
+            yield self.batch(step, host_index, host_count)
+            step += 1
+
+
 def place_batch(batch: dict[str, np.ndarray], mesh=None):
     """Put a host-local batch onto the mesh with global-batch sharding."""
     if mesh is None:

@@ -2,8 +2,13 @@
 per-microbatch reduce-scatter overlaps the next microbatch's compute under
 XLA's latency-hiding scheduler), AdamW apply, metrics.
 
-``make_train_step(cfg, ...)`` returns a pure function suitable both for
+``make_train_step(cfg, ...)`` is the single train-step factory for every
+family — LM/audio (``ArchConfig``) and the Spikingformer vision path
+(``SpikingFormerConfig``) — and returns a pure function suitable both for
 jit execution and for ``.lower().compile()`` in the multi-pod dry-run.
+Mesh awareness lives in the model code (``shard`` constraints that no-op
+without an ambient mesh) plus the optional ``mesh=`` kwarg, which adds the
+input-batch constraints; callers run the step under ``jax.set_mesh``.
 """
 from __future__ import annotations
 
@@ -25,12 +30,29 @@ def _loss_fn_for(cfg: ArchConfig) -> Callable:
     return lm_loss
 
 
-def make_train_step(cfg: ArchConfig, opt_cfg: OptimizerConfig,
-                    microbatches: int = 1) -> Callable:
-    """Returns train_step(params, opt_state, batch) ->
-    (params, opt_state, metrics). ``batch`` leaves have leading dim
-    (global_batch, ...); with microbatches > 1 they are split
-    (microbatches, global_batch // microbatches, ...) and accumulated."""
+def make_train_step(cfg: Any, opt_cfg: OptimizerConfig,
+                    microbatches: int = 1, *, mesh=None) -> Callable:
+    """The unified train-step factory.
+
+    * LM/audio (``cfg.family`` in {"lm", "audio", ...}): returns
+      ``train_step(params, opt_state, batch) -> (params, opt_state,
+      metrics)``. ``batch`` leaves have leading dim (global_batch, ...);
+      with microbatches > 1 they are split (microbatches, global_batch //
+      microbatches, ...) and accumulated.
+    * Spikingformer vision (``cfg.family == "vision"``): returns
+      ``train_step(params, state, opt_state, images, labels) -> (params,
+      state, opt_state, metrics)`` where ``state`` carries BN running
+      statistics.
+
+    ``mesh`` adds the input-batch sharding constraints on the vision path
+    (batch over the ("pod", "data") axes; the LM path's inputs arrive
+    pre-placed by ``place_batch``); activation/parameter placement is the
+    model's ``shard`` constraints plus the shardings params were
+    initialized into (see ``launch.train.build_state`` /
+    ``build_spikingformer_state``).
+    """
+    if getattr(cfg, "family", None) == "vision":
+        return _make_vision_train_step(cfg, opt_cfg, microbatches, mesh)
     loss_fn = _loss_fn_for(cfg)
 
     def train_step(params, opt_state, batch):
@@ -62,21 +84,44 @@ def make_train_step(cfg: ArchConfig, opt_cfg: OptimizerConfig,
     return train_step
 
 
-def make_spikingformer_train_step(cfg, opt_cfg: OptimizerConfig) -> Callable:
+def _make_vision_train_step(cfg, opt_cfg: OptimizerConfig,
+                            microbatches: int, mesh) -> Callable:
     """Fused BPTT + AdamW step for the Spikingformer vision path.
 
     ``cfg`` is a :class:`repro.core.spikingformer.SpikingFormerConfig`; its
     ``policy`` field (an :class:`repro.core.policy.ExecutionPolicy`) selects
     the execution path per site, so the same train step runs the reference
     jnp scan on CPU and the fused SOMA/GRAD (+ packed spike-matmul /
-    packed-attention) kernels on TPU. Returns ``step(params, state,
+    packed-attention) kernels on TPU, and its ``time_chunk`` field tiles
+    the BPTT scan temporally. Returns the pure ``step(params, state,
     opt_state, images, labels) -> (params, state, opt_state, metrics)``
-    where ``state`` carries BN running statistics.
+    (callers jit it; :func:`make_spikingformer_train_step` does so for the
+    single-device path) where ``state`` carries BN running statistics.
     """
     from repro.core.spikingformer import spikingformer_grad_step
 
-    @jax.jit
+    if microbatches != 1:
+        # Accumulating grads across microbatches would also have to merge
+        # BN batch statistics; refuse rather than silently change the math.
+        raise NotImplementedError(
+            "microbatch accumulation is not supported on the vision path "
+            "(BatchNorm statistics are per-global-batch); use time_chunk "
+            "for activation-memory relief instead")
+
+    batch_axes_ = None
+    if mesh is not None:
+        from repro.launch.mesh import batch_axes
+        batch_axes_ = batch_axes(mesh) or None
+
     def train_step(params, state, opt_state, images, labels):
+        if batch_axes_ is not None:
+            from jax.sharding import PartitionSpec as P
+            # images: (B, H, W, C) static or (T, B, H, W, C) temporal
+            lead = (None,) if images.ndim == 5 else ()
+            img_spec = P(*lead, batch_axes_,
+                         *([None] * (images.ndim - len(lead) - 1)))
+            images = jax.lax.with_sharding_constraint(images, img_spec)
+            labels = jax.lax.with_sharding_constraint(labels, P(batch_axes_))
         grads, new_state, metrics = spikingformer_grad_step(
             params, state, images, labels, cfg)
         new_params, new_opt, opt_metrics = adamw_update(
@@ -84,6 +129,12 @@ def make_spikingformer_train_step(cfg, opt_cfg: OptimizerConfig) -> Callable:
         return new_params, new_state, new_opt, {**metrics, **opt_metrics}
 
     return train_step
+
+
+def make_spikingformer_train_step(cfg, opt_cfg: OptimizerConfig) -> Callable:
+    """Back-compat wrapper: the unified factory at mesh=None, jitted (the
+    historical signature returned a jitted step)."""
+    return jax.jit(make_train_step(cfg, opt_cfg))
 
 
 def make_eval_step(cfg: ArchConfig) -> Callable:

@@ -27,11 +27,17 @@ import pytest  # noqa: E402
 # The suite is XLA-compile dominated; the persistent compilation cache cuts
 # warm reruns to a fraction of the cold time (cache keys include jax
 # version + compile options, so it never masks behavior changes).
+# Single-device processes only: jaxlib 0.4.x segfaults when it
+# *deserializes* a cached multi-device SPMD executable (observed with the
+# forced-8-device tests/test_sharding.py run — first, cache-writing run
+# passes, every warm rerun crashes in native code), so the sharded leg
+# always compiles cold.
 try:
-    _cache = os.environ.get("JAX_COMPILATION_CACHE_DIR",
-                            str(Path(__file__).parent / ".jax_cache"))
-    jax.config.update("jax_compilation_cache_dir", _cache)
-    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+    if jax.device_count() == 1:
+        _cache = os.environ.get("JAX_COMPILATION_CACHE_DIR",
+                                str(Path(__file__).parent / ".jax_cache"))
+        jax.config.update("jax_compilation_cache_dir", _cache)
+        jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
 except Exception:  # older jax without the persistent cache: run cold
     pass
 

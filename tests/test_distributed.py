@@ -3,10 +3,13 @@
 These run in subprocesses so the 8-device XLA flag never leaks into the
 rest of the suite (which must see 1 device).
 """
+import os
 import subprocess
 import sys
 
 import pytest
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 PREAMBLE = """
 import os
@@ -14,7 +17,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs.registry import get_config, reduced
-from repro.launch.mesh import apply_fsdp, make_test_mesh, sanitize_specs
+from repro.launch.mesh import apply_fsdp, make_test_mesh, sanitize_specs, use_mesh
 from repro.models.common import split_tree
 from repro.models.lm import init_lm, lm_loss
 """
@@ -23,9 +26,10 @@ from repro.models.lm import init_lm, lm_loss
 def run_py(body: str) -> str:
     out = subprocess.run(
         [sys.executable, "-c", PREAMBLE + body], capture_output=True,
-        text=True, timeout=600, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                                     "HOME": "/root"},
-        cwd="/root/repo")
+        text=True, timeout=600,
+        env={"PYTHONPATH": "src", "PATH": os.environ.get("PATH", ""),
+             "HOME": os.environ.get("HOME", "/root")},
+        cwd=REPO_ROOT)
     assert out.returncode == 0, out.stderr[-3000:]
     return out.stdout
 
@@ -42,7 +46,7 @@ batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0, cfg.voc
 
 mesh = make_test_mesh(2, 4)
 grad_fn = lambda p, b: jax.value_and_grad(lm_loss, has_aux=True)(p, b, cfg)
-with jax.set_mesh(mesh):
+with use_mesh(mesh):
     (l_sh, _), g_sh = jax.jit(grad_fn)(params, batch)
 print("LOSS", float(l_ref), float(l_sh))
 err = max(float(jnp.max(jnp.abs(a - b))) for a, b in
@@ -79,7 +83,7 @@ for k in ("w_gate", "w_up", "w_down"):
     p4[k] = jnp.asarray(reshape_moe_layout(np.asarray(p1[k]), 1, 4, 8))
 p4["router"] = p1["router"]
 mesh = make_test_mesh(2, 4)
-with jax.set_mesh(mesh):
+with use_mesh(mesh):
     y4, aux4 = jax.jit(lambda p, x: moe_apply(p, x, cfg4))(p4, x)
 err = float(jnp.max(jnp.abs(y1 - y4)))
 print("MOE_ERR", err)
@@ -125,7 +129,7 @@ def make(key):
 struct = jax.eval_shape(make, jax.random.PRNGKey(0))
 mesh_a = make_test_mesh(4, 2)
 specs = sanitize_specs(box["s"], struct, mesh_a)
-with jax.set_mesh(mesh_a):
+with use_mesh(mesh_a):
     params = jax.jit(make)(jax.random.PRNGKey(0))
 ckpt.save_checkpoint(r"{tmp_path}", 1, params, specs)
 mesh_b = make_test_mesh(2, 2)
@@ -136,3 +140,20 @@ for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
 print("ELASTIC_OK True")
 """)
     assert "ELASTIC_OK True" in out
+
+
+@pytest.mark.slow
+def test_spikingformer_sharding_suite():
+    """Drive tests/test_sharding.py (the mesh-sharded Spikingformer
+    semantics: parity vs single device, FSDP placement, checkpoint
+    round-trip, the vision launch driver) on a forced 8-device CPU — the
+    same file the CI ``test-sharded`` leg runs directly."""
+    out = subprocess.run(
+        [sys.executable, "-m", "pytest", "-q", "tests/test_sharding.py"],
+        capture_output=True, text=True, timeout=1200,
+        env={"PYTHONPATH": "src", "PATH": os.environ.get("PATH", ""),
+             "HOME": os.environ.get("HOME", "/root"),
+             "XLA_FLAGS": "--xla_force_host_platform_device_count=8"},
+        cwd=REPO_ROOT)
+    assert out.returncode == 0, (out.stdout[-2000:], out.stderr[-2000:])
+    assert "passed" in out.stdout

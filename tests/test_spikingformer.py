@@ -18,6 +18,10 @@ CFG = get_spikingformer_config("spikingformer-smoke")
 CFG_JNP = CFG.with_policy(named_policy("jnp"))
 KEY = jax.random.PRNGKey(0)
 
+# spikingformer_loss/spikingformer_grad_step are deliberately un-jitted
+# (they trace inside the jitted train step); tests compile them here.
+GRAD_STEP = jax.jit(spikingformer_grad_step, static_argnums=4)
+
 
 @pytest.fixture(scope="module")
 def model():
@@ -64,7 +68,7 @@ def test_gradients_flow_to_all_params(model):
     params, state = model
     imgs = jax.random.uniform(KEY, (4, 32, 32, 3))
     labels = jnp.array([0, 1, 2, 3])
-    grads, _, _ = spikingformer_grad_step(params, state, imgs, labels, CFG)
+    grads, _, _ = GRAD_STEP(params, state, imgs, labels, CFG)
     flat = jax.tree_util.tree_flatten_with_path(grads)[0]
     dead = [path for path, g in flat
             if float(jnp.abs(g.astype(jnp.float32)).sum()) == 0.0]
@@ -80,8 +84,7 @@ def test_training_reduces_loss(model):
     lr = 5e-2
     losses = []
     for _ in range(8):
-        grads, state, metrics = spikingformer_grad_step(params, state, imgs,
-                                                        labels, CFG)
+        grads, state, metrics = GRAD_STEP(params, state, imgs, labels, CFG)
         params = jax.tree.map(lambda p, g: p - lr * g, params, grads)
         losses.append(float(metrics["loss"]))
     assert losses[-1] < losses[0] * 0.9, losses
@@ -180,10 +183,11 @@ def test_model_backend_parity(model, policy_name):
     cfg_p = CFG.with_policy(dataclasses.replace(
         PARITY_POLICIES[policy_name], interpret=True))
 
+    grad_fn = jax.jit(jax.value_and_grad(spikingformer_loss, has_aux=True),
+                      static_argnums=4)
+
     def run(cfg):
-        (loss, (st, _)), grads = jax.value_and_grad(
-            spikingformer_loss, has_aux=True)(params, state, imgs, labels,
-                                              cfg)
+        (loss, (st, _)), grads = grad_fn(params, state, imgs, labels, cfg)
         return loss, st, grads
 
     loss_j, st_j, g_j = run(CFG_JNP)
@@ -197,3 +201,69 @@ def test_model_backend_parity(model, policy_name):
     lg_p, _ = spikingformer_apply(params, state, imgs, cfg_p, train=False)
     np.testing.assert_allclose(np.asarray(lg_j), np.asarray(lg_p), atol=1e-5,
                                rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Temporal tiling (time_chunk): exact-gradient parity with the single-shot
+# BPTT scan (the remat'd chunk scan recomputes, it never approximates).
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("time_chunk", [1, "T/2", "T"])
+def test_time_chunk_exact_grad_parity(model, time_chunk):
+    import dataclasses
+
+    t = CFG.time_steps
+    tc = {1: 1, "T/2": max(t // 2, 1), "T": t}[time_chunk]
+    params, state = model
+    imgs = jax.random.uniform(jax.random.PRNGKey(11), (4, 32, 32, 3))
+    labels = jnp.array([0, 1, 2, 3])
+    # Under the jnp reference policy the tiled scan is BITWISE identical
+    # (same elementwise recursion, remat recomputes the same values).
+    grads_j, _, m_j = GRAD_STEP(params, state, imgs, labels, CFG_JNP)
+    grads_j_tc, _, m_j_tc = GRAD_STEP(
+        params, state, imgs, labels,
+        dataclasses.replace(CFG_JNP, time_chunk=tc))
+    assert float(m_j["loss"]) == float(m_j_tc["loss"])
+    for (path, a), b in zip(jax.tree_util.tree_flatten_with_path(grads_j)[0],
+                            jax.tree.leaves(grads_j_tc)):
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b),
+            err_msg=f"time_chunk={tc} grad mismatch at "
+                    f"{jax.tree_util.keystr(path)}")
+    # Whatever policy the env selected (the CI pallas-full leg reaches
+    # here): forward bitwise, grads to scale-aware 1e-6 — the fused-kernel
+    # chunk boundary fma can move large gradients by 1 ulp.
+    grads, st, metrics = GRAD_STEP(params, state, imgs, labels, CFG)
+    cfg_tc = dataclasses.replace(CFG, time_chunk=tc)
+    grads_tc, st_tc, metrics_tc = GRAD_STEP(params, state, imgs, labels,
+                                            cfg_tc)
+    assert float(metrics["loss"]) == float(metrics_tc["loss"])
+    _grad_trees_close(grads, grads_tc, atol=1e-6)
+    for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(st_tc)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_time_chunk_nondivisible_falls_back():
+    """T % time_chunk != 0 keeps the single-shot scan (logged, not wrong)."""
+    import dataclasses
+    from repro.core.lif import LIFConfig, lif_scan
+
+    x = jax.random.normal(KEY, (3, 4, 8)) * 2
+    ref = lif_scan(x, LIFConfig())
+    got = lif_scan(x, LIFConfig(time_chunk=2))     # 3 % 2 != 0
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(got))
+
+
+def test_loss_jit_entry_point_matches(model):
+    """The compiled public entry point reproduces the raw (un-jitted)
+    loss exactly, loss and metrics both."""
+    from repro.core.spikingformer import (spikingformer_loss,
+                                          spikingformer_loss_jit)
+
+    params, state = model
+    imgs = jax.random.uniform(KEY, (2, 32, 32, 3))
+    labels = jnp.array([1, 3])
+    l1, (_, m1) = spikingformer_loss_jit(params, state, imgs, labels, CFG)
+    l2, (_, m2) = spikingformer_loss(params, state, imgs, labels, CFG)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-6)
+    assert float(m1["accuracy"]) == float(m2["accuracy"])

@@ -137,6 +137,30 @@ def test_checkpoint_atomicity(tmp_path):
     assert ckpt.latest_step(str(tmp_path)) == 3
 
 
+def test_checkpoint_none_specs_align_by_name(tmp_path):
+    """``None`` (replicated) spec leaves must not shift the value/spec
+    alignment: specs are matched by path name, not flatten order."""
+    tree = {"a": jnp.arange(4.0), "b": jnp.ones((2, 2)), "c": jnp.zeros(3)}
+    specs = {"a": None, "b": P(None, None), "c": P(None)}
+    ckpt.save_checkpoint(str(tmp_path), 1, tree, specs)
+    out = ckpt.restore_checkpoint(str(tmp_path), 1, tree)
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_checkpoint_restore_uses_saved_specs(tmp_path):
+    """Without a caller-supplied spec tree, restore re-resolves the logical
+    specs persisted in index.json against the given mesh (host-count- and
+    writer-agnostic restore)."""
+    from repro.launch.mesh import make_test_mesh
+    tree = {"w": jnp.arange(16.0).reshape(4, 4)}
+    ckpt.save_checkpoint(str(tmp_path), 2, tree, {"w": P("data", "model")})
+    mesh = make_test_mesh(1, 1)
+    out = ckpt.restore_checkpoint(str(tmp_path), 2, tree, mesh)
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(tree["w"]))
+    assert out["w"].sharding.mesh.devices.size == 1
+
+
 def test_moe_elastic_relayout_roundtrip():
     """(M, E_loc, D, F_loc) relayout old->new->old is the identity, for both
     the EP (E>=M) and TP-pair (E<M) regimes."""
