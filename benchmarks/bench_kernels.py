@@ -70,6 +70,68 @@ def run(smoke: bool = False) -> list[str]:
     us = _time(lambda a: ops.bn_train_op(a, g, b)[0], xb, reps=reps)
     ref_us = _time(lambda a: ref.bn_fwd_ref(a, g, b)[0], xb, reps=reps)
     lines.append(f"fused_bn_fwd,{us:.0f},ref={ref_us:.0f}us")
+
+    lines += conv_rows(smoke=smoke, reps=reps)
+    return lines
+
+
+def conv_rows(smoke: bool = False, reps: int = 3) -> list[str]:
+    """Tokenizer eq. 4 stage micro-bench: the dense XLA conv vs the im2col
+    bit-packed spike-conv matmul vs the whole fused conv_bn_lif stage
+    against its three-dispatch reference chain (conv -> BN -> LIF)."""
+    from repro.core.lif import LIFConfig
+    from repro.core.policy import ExecutionPolicy, get_kernel
+    from repro.core.spiking_layers import init_bn
+    from repro.core.spikingformer import conv_bn_lif_fused
+    from repro.kernels.conv_spike import conv_w_matrix, im2col, spike_pack
+
+    t, b, hw, cin, cout = (2, 2, 8, 16, 32) if smoke else (4, 4, 16, 64, 128)
+    key = jax.random.PRNGKey(4)
+    spikes = (jax.random.uniform(key, (t, b, hw, hw, cin)) < 0.2
+              ).astype(jnp.float32)
+    w = jax.random.normal(key, (3, 3, cin, cout)) * (9 * cin) ** -0.5
+
+    def dense_conv(x):
+        return jax.lax.conv_general_dilated(
+            x.reshape(t * b, hw, hw, cin), w, window_strides=(2, 2),
+            padding="SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+    us_dense = _time(jax.jit(dense_conv), spikes, reps=reps)
+    lines = [f"conv_dense_jnp,{us_dense:.0f},k3s2 {t}x{b}x{hw}x{hw}x{cin}"]
+
+    w_mat = conv_w_matrix(w)
+
+    def packed_conv(x):
+        p = im2col(x.reshape(t * b, hw, hw, cin))
+        p = p.reshape(t, -1, p.shape[-1])
+        return ops.spike_patch_mm_train_op(p, w_mat)
+
+    us_packed = _time(jax.jit(packed_conv), spikes, reps=reps)
+    ratio = spikes.astype(jnp.bfloat16).nbytes / spike_pack(
+        im2col(spikes.reshape(t * b, hw, hw, cin))).nbytes
+    lines.append(f"conv_im2col_packed,{us_packed:.0f},"
+                 f"dense={us_dense:.0f}us;patch_bytes_vs_bf16={ratio:.1f}x")
+
+    pol = ExecutionPolicy(backend="pallas", interpret=True)
+    lif_cfg = LIFConfig(policy=pol)
+    bn_params, bn_state = init_bn(cout)
+    params = {"conv": {"w": w}, "bn": bn_params}
+    state = {"bn": bn_state}
+
+    def fused(x):
+        y, _ = conv_bn_lif_fused(params, state, x, lif_cfg, True, True, pol,
+                                 "bench.conv", packed=True)
+        return y
+
+    def chain(x):
+        y, _ = get_kernel("conv", "jnp")(params, state, x, lif_cfg, True,
+                                         True, pol, "bench.conv")
+        return y
+
+    us_fused = _time(jax.jit(fused), spikes, reps=reps)
+    us_chain = _time(jax.jit(chain), spikes, reps=reps)
+    lines.append(f"conv_bn_lif_fused,{us_fused:.0f},"
+                 f"three_dispatch_chain={us_chain:.0f}us")
     return lines
 
 

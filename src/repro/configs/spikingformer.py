@@ -39,6 +39,14 @@ SPIKINGFORMER_PRESETS: dict[str, SpikingFormerConfig] = {
     "spikingformer-smoke": SpikingFormerConfig(
         num_layers=2, d_model=64, n_heads=2, d_ff=128, time_steps=2,
         image_size=32, patch_grid=8, num_classes=10),
+    # Pre-encoded spike-frame (DVS-style event data) smoke variant: the
+    # first tokenizer stage consumes {0,1} frames over 8 input channels
+    # (9*8 = 72, a multiple of 8), so under "pallas-full" *every* eq. 4
+    # stage — stage 1 included — rides the bit-packed im2col spike conv.
+    "spikingformer-smoke-dvs": SpikingFormerConfig(
+        num_layers=2, d_model=64, n_heads=2, d_ff=128, time_steps=2,
+        image_size=32, patch_grid=8, num_classes=10, in_channels=8,
+        spike_input=True),
 }
 
 

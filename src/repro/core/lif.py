@@ -225,7 +225,10 @@ def lif_scan(x_seq: jax.Array, cfg: LIFConfig, site: str = "lif") -> jax.Array:
     policy the recursion runs as the fused GRAD kernel itself.
 
     ``site`` names this call site for per-site policy overrides (the model
-    passes ``"tokenizer.lif"``/``"pssa.lif"``/``"smlp.lif"``).
+    passes ``"tokenizer.lif"``/``"pssa.lif"``/``"smlp.lif"``). The fused
+    tokenizer pipeline (``conv_bn_lif``) dispatches here as its SOMA
+    epilogue with the matmul output already in the (T, M, D) time-major
+    layout the fused kernel consumes — the fold below is then a no-op.
 
     With ``cfg.time_chunk`` set (and < T), the scan is temporally tiled:
     chunks of that length run the stateful kernel under ``jax.checkpoint``

@@ -26,13 +26,17 @@ two pieces:
 Resolution precedence for ``resolve(site, op)``:
 
 1. an override keyed by the exact *site* name (``"pssa.qkv"``),
-2. an override keyed by the *op* name (``"linear_bn"``),
-3. the backend's default implementation for the op.
+2. an override keyed by a dotted *group prefix* of the site
+   (``"tokenizer.conv"`` covers every per-stage ``"tokenizer.conv.<i>"``
+   site; nearest prefix wins),
+3. an override keyed by the *op* name (``"linear_bn"``),
+4. the backend's default implementation for the op.
 
 Packing constraints (the bit-packed spike kernels need their contraction
-dim to be a multiple of 8) are resolved **once, at policy-validation time**
-via :func:`plan_sites` — which reports the effective implementation per site
-— instead of silently falling back per call.
+dim to be a multiple of 8, and a spike-valued operand) are resolved
+**once, at policy-validation time** via :func:`plan_sites` — which reports
+the effective implementation per site — instead of silently falling back
+per call.
 """
 from __future__ import annotations
 
@@ -56,9 +60,9 @@ OPS: tuple[str, ...] = ("lif", "lif_state", "bn", "linear_bn", "attn_qk",
                         "attn_av", "conv")
 
 # Per-backend default implementation for each op. The attention einsums and
-# the tokenizer conv stay on jnp even under backend="pallas" (packed
-# attention is opt-in via the "pallas-full" policy until TPU-soaked, and the
-# fused tokenizer conv is an open ROADMAP item).
+# the tokenizer conv stay on their dense/einsum defaults even under
+# backend="pallas" (packed attention and the fused im2col tokenizer conv
+# are opt-in via the "pallas-full" policy until TPU-soaked).
 _DEFAULT_IMPL: dict[tuple[str, str], str] = {
     ("lif", "jnp"): "jnp", ("lif", "pallas"): "pallas",
     ("lif_state", "jnp"): "jnp", ("lif_state", "pallas"): "pallas",
@@ -70,11 +74,25 @@ _DEFAULT_IMPL: dict[tuple[str, str], str] = {
 }
 
 #: impl -> fallback impl used when a site's packing constraint
-#: (contraction dim % 8 == 0) cannot be met.
+#: (contraction dim % 8 == 0, spike-valued operand) cannot be met.
 PACKED_IMPL_FALLBACK: dict[str, str] = {
     "pallas+spike_mm": "pallas",   # dense matmul + fused BN
     "pallas_packed": "jnp",        # plain einsum
 }
+
+#: (op, impl) -> fallback, consulted before the impl-keyed table. The
+#: packed tokenizer conv demotes to the *dense im2col* arm of the fused
+#: conv+BN+LIF pipeline (still one matmul + folded BN + SOMA epilogue),
+#: not all the way to the jnp reference conv.
+_PACKED_OP_FALLBACK: dict[tuple[str, str], str] = {
+    ("conv", "pallas_packed"): "pallas",
+}
+
+
+def packed_fallback(op: str, impl: str) -> str | None:
+    """The dense fallback for a packed implementation at ``op`` (``None``
+    when ``impl`` has no packing constraint)."""
+    return _PACKED_OP_FALLBACK.get((op, impl), PACKED_IMPL_FALLBACK.get(impl))
 
 
 def default_impl(op: str, backend: str) -> str:
@@ -108,11 +126,24 @@ class ExecutionPolicy:
             tuple(sorted((str(k), str(v)) for k, v in ov)))
 
     def resolve(self, site: str, op: str) -> str:
-        """Implementation name for ``site`` (an instance of ``op``)."""
+        """Implementation name for ``site`` (an instance of ``op``).
+
+        Site keys resolve hierarchically: the exact name first, then each
+        dotted group prefix (``"tokenizer.conv.2"`` falls back to
+        ``"tokenizer.conv"``, then ``"tokenizer"``), then the op name, then
+        the backend default — so one override can cover a whole site group
+        (e.g. every per-stage tokenizer conv).
+        """
         ov = dict(self.overrides)
-        impl = ov.get(site)
-        if impl is None:
-            impl = ov.get(op)
+        key = site
+        while True:
+            impl = ov.get(key)
+            if impl is not None:
+                return impl
+            if "." not in key:
+                break
+            key = key.rsplit(".", 1)[0]
+        impl = ov.get(op)
         if impl is None:
             impl = default_impl(op, self.backend)
         return impl
@@ -127,19 +158,22 @@ class ExecutionPolicy:
                 ov[k] = v
         return dataclasses.replace(self, overrides=tuple(ov.items()))
 
-    def describe(self, site_specs: Sequence[tuple[str, str, int | None]]
-                 | None = None) -> str:
+    def describe(self, site_specs: Sequence[tuple] | None = None, *,
+                 rows: Sequence["SiteDecision"] | None = None) -> str:
         """Human-readable per-site dispatch table.
 
-        Without ``site_specs`` the table shows the op-level defaults plus
-        any overrides; with specs (``(site, op, pack_dim)`` triples, e.g.
-        from ``repro.core.spikingformer.execution_site_specs``) it shows the
-        *effective* implementation per model site, including packing
-        fallbacks.
+        Without arguments the table shows the op-level defaults plus any
+        overrides; with ``site_specs`` (``(site, op, pack_dim[,
+        spike_operand])`` tuples) it shows the *effective* implementation
+        per model site, including packing fallbacks. Callers that already
+        hold resolved (possibly post-processed) :class:`SiteDecision` rows
+        — e.g. ``SpikingFormerConfig.execution_plan`` with its
+        ``tokenizer.bn`` fold annotation — pass them via ``rows`` instead.
         """
-        if site_specs is None:
-            site_specs = [(op, op, None) for op in OPS]
-        rows = plan_sites(self, site_specs, check_registry=False)
+        if rows is None:
+            if site_specs is None:
+                site_specs = [(op, op, None) for op in OPS]
+            rows = plan_sites(self, site_specs, check_registry=False)
         header = f"# ExecutionPolicy backend={self.backend} " \
                  f"interpret={self.interpret}"
         lines = [header, "site,op,requested,effective,note"]
@@ -151,49 +185,77 @@ class ExecutionPolicy:
 
 @dataclasses.dataclass(frozen=True)
 class SiteDecision:
-    """One row of a resolved execution plan."""
+    """One row of a resolved execution plan.
+
+    ``expected`` marks a *structural* demotion the model shape dictates by
+    design (e.g. the float-image first tokenizer stage cannot ride the
+    spike-packed conv) — reported at INFO, unlike constraint violations
+    (ragged pack dims), which stay warnings.
+    """
 
     site: str
     op: str
     requested: str
     effective: str
     note: str = ""
+    expected: bool = False
 
 
 def plan_sites(policy: ExecutionPolicy,
-               site_specs: Sequence[tuple[str, str, int | None]],
+               site_specs: Sequence[tuple],
                *, check_registry: bool = True) -> list[SiteDecision]:
     """Resolve every site once and report packing fallbacks.
 
-    ``site_specs`` is a sequence of ``(site, op, pack_dim)``: ``pack_dim``
-    is the contraction dimension a bit-packed implementation would pack
-    (``None`` when the op has no packing constraint). A packed impl whose
-    ``pack_dim % 8 != 0`` is resolved to its dense fallback *here* — the
-    per-call path then only logs if it ever still disagrees (it should not).
+    ``site_specs`` is a sequence of ``(site, op, pack_dim)`` or ``(site,
+    op, pack_dim, spike_operand)``: ``pack_dim`` is the contraction
+    dimension a bit-packed implementation would pack (``None`` when the op
+    has no packing constraint) and ``spike_operand`` (default ``True``)
+    says whether the operand a packed impl would pack is {0,1}-valued at
+    that site. A packed impl with a float operand demotes to its dense
+    fallback as an *expected* (structural) decision; one whose
+    ``pack_dim % 8 != 0`` is resolved to the same fallback as a reported
+    constraint violation. Both are decided *here* — the per-call path then
+    only logs if it ever still disagrees (it should not).
 
     With ``check_registry=True`` every effective implementation must exist
     in the registry, and every override key must match one of the planned
-    sites or a known op name — so a typo'd impl *or* a typo'd site fails at
-    policy-validation time rather than silently doing nothing.
+    sites, a dotted group prefix of one (``"tokenizer.conv"`` covers the
+    per-stage ``"tokenizer.conv.<i>"`` sites), or a known op name — so a
+    typo'd impl *or* a typo'd site fails at policy-validation time rather
+    than silently doing nothing.
     """
     rows = []
-    for site, op, dim in site_specs:
+    for spec in site_specs:
+        site, op, dim = spec[0], spec[1], spec[2]
+        spike_operand = spec[3] if len(spec) > 3 else True
         requested = policy.resolve(site, op)
-        effective, note = requested, ""
-        if requested in PACKED_IMPL_FALLBACK and dim is not None \
-                and dim % 8 != 0:
-            effective = PACKED_IMPL_FALLBACK[requested]
-            note = (f"pack dim {dim} % 8 != 0 -> {effective}")
+        effective, note, expected = requested, "", False
+        fb = packed_fallback(op, requested)
+        if fb is not None:
+            if not spike_operand:
+                effective = fb
+                note = f"float (non-spike) operand -> {fb}"
+                expected = True
+            elif dim is not None and dim % 8 != 0:
+                effective = fb
+                note = f"pack dim {dim} % 8 != 0 -> {fb}"
         if check_registry:
             get_kernel(op, effective)   # raises on unknown impl
-        rows.append(SiteDecision(site, op, requested, effective, note))
+        rows.append(SiteDecision(site, op, requested, effective, note,
+                                 expected))
     if check_registry:
-        known = {s for s, _, _ in site_specs} | set(OPS)
-        unmatched = [k for k, _ in policy.overrides if k not in known]
+        sites = {spec[0] for spec in site_specs}
+        known = sites | set(OPS)
+
+        def matches(key: str) -> bool:
+            return key in known or any(s.startswith(key + ".")
+                                       for s in sites)
+
+        unmatched = [k for k, _ in policy.overrides if not matches(k)]
         if unmatched:
             raise ValueError(
-                f"policy overrides {unmatched} match no site or op; "
-                f"sites: {sorted(known - set(OPS))}, ops: {OPS}")
+                f"policy overrides {unmatched} match no site, site group or "
+                f"op; sites: {sorted(sites)}, ops: {OPS}")
     return rows
 
 
@@ -202,22 +264,33 @@ _reported_fallbacks: set[tuple[str, str]] = set()
 
 def log_fallbacks(rows: Iterable[SiteDecision]) -> None:
     """Report (once per site+note) every site whose requested impl was
-    replaced by its dense fallback at validation time."""
+    replaced by its dense fallback at validation time.
+
+    Constraint violations (ragged pack dims) are warnings; *expected*
+    structural demotions (``SiteDecision.expected``, e.g. the float-input
+    first tokenizer stage) log at INFO so well-shaped configs stay
+    warning-free.
+    """
     for r in rows:
         if r.note and (r.site, r.note) not in _reported_fallbacks:
             _reported_fallbacks.add((r.site, r.note))
-            logger.warning("execution policy: site %s requested %r but %s",
-                           r.site, r.requested, r.note)
+            log = logger.info if r.expected else logger.warning
+            log("execution policy: site %s requested %r but %s",
+                r.site, r.requested, r.note)
 
 
-def runtime_fallback(site: str, impl: str, reason: str) -> None:
+def runtime_fallback(site: str, impl: str, reason: str,
+                     expected: bool = False) -> None:
     """Log (once per site+reason) a per-call fallback that validation did
-    not predict — e.g. a layer called directly with an odd shape."""
+    not predict — e.g. a layer called directly with an odd shape.
+    ``expected`` demotes to INFO for structural per-call decisions the plan
+    already reported (e.g. the float-input first tokenizer stage)."""
     key = (site, reason)
     if key not in _reported_fallbacks:
         _reported_fallbacks.add(key)
-        logger.warning("execution policy: site %s impl %r fell back at call "
-                       "time: %s", site, impl, reason)
+        log = logger.info if expected else logger.warning
+        log("execution policy: site %s impl %r fell back at call "
+            "time: %s", site, impl, reason)
 
 
 # ---------------------------------------------------------------------------
@@ -242,7 +315,12 @@ def register_kernel(op: str, impl: str) -> Callable:
                       -> (y, state)``
     * ``attn_qk``:   ``fn(q, k, policy, site) -> attn``  (T,B,h,N,M)
     * ``attn_av``:   ``fn(attn, v, policy, site) -> out`` (T,B,h,N,dh)
-    * ``conv``:      ``fn(params, x, policy, site) -> y``
+    * ``conv``:      ``fn(params, state, x, lif_cfg, train, spike_in,
+                      policy, site) -> (spikes, new_state)`` — one full
+                      eq. 4 tokenizer stage (Conv k3/s2 -> BN -> LIF) on a
+                      time-major (T, B, H, W, C) input; ``spike_in`` says
+                      whether ``x`` is {0,1}-valued (stage >= 2, or stage 1
+                      on pre-encoded spike frames)
     """
     def deco(fn: Callable) -> Callable:
         _REGISTRY[(op, impl)] = fn
@@ -282,11 +360,13 @@ def _ensure_builtins() -> None:
 # ---------------------------------------------------------------------------
 
 #: Everything-on policy: fused LIF/BN kernels, packed spike matmul at every
-#: Conv1DBN site, and the packed (QK^T)V attention path.
+#: Conv1DBN site, the packed (QK^T)V attention path, and the fused im2col
+#: spike-conv tokenizer (Conv->BN->LIF collapsed per eq. 4 stage; float-input
+#: stages ride the dense-im2col arm of the same fused pipeline).
 _PALLAS_FULL = ExecutionPolicy(
     backend="pallas",
     overrides=(("attn_av", "pallas_packed"), ("attn_qk", "pallas_packed"),
-               ("linear_bn", "pallas+spike_mm")))
+               ("conv", "pallas_packed"), ("linear_bn", "pallas+spike_mm")))
 
 NAMED_POLICIES: dict[str, ExecutionPolicy] = {
     "jnp": ExecutionPolicy(),
@@ -370,6 +450,7 @@ __all__ = [
     "BACKENDS", "ExecutionPolicy", "NAMED_POLICIES", "OPS", "SiteDecision",
     "apply_legacy_exec_flags", "available_impls", "default_impl",
     "default_policy", "get_kernel", "list_named_policies", "log_fallbacks",
-    "named_policy", "plan_sites", "policy_from_flags", "register_kernel",
-    "runtime_fallback", "unregister_kernel", "warn_deprecated_flags",
+    "named_policy", "packed_fallback", "plan_sites", "policy_from_flags",
+    "register_kernel", "runtime_fallback", "unregister_kernel",
+    "warn_deprecated_flags",
 ]

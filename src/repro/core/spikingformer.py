@@ -21,10 +21,11 @@ from jax.sharding import PartitionSpec as P
 from repro.core.lif import LIFConfig, lif_scan
 from repro.core.policy import (ExecutionPolicy, apply_legacy_exec_flags,
                                get_kernel, plan_sites, policy_from_flags,
-                               register_kernel, warn_deprecated_flags)
-from repro.core.spiking_layers import (ACT_SPECS, BlockConfig, bn_apply,
-                                       block_apply, init_block, init_bn,
-                                       init_linear, linear_apply)
+                               register_kernel, runtime_fallback,
+                               warn_deprecated_flags)
+from repro.core.spiking_layers import (ACT_SPECS, BlockConfig, _bn_pallas,
+                                       bn_apply, block_apply, init_block,
+                                       init_bn, init_linear, linear_apply)
 from repro.models.common import BATCH, MODEL, shard, spec_is_leaf
 
 Params = dict[str, Any]
@@ -58,6 +59,10 @@ class SpikingFormerConfig:
     # threaded across chunk boundaries — stored BPTT residuals scale with
     # T/time_chunk instead of T, gradients stay exact. None = single-shot.
     time_chunk: int | None = None
+    # True when the input frames are pre-encoded {0,1} spikes (DVS-style
+    # event data): the *first* tokenizer stage then also qualifies for the
+    # bit-packed spike-conv path (stages >= 2 always consume LIF spikes).
+    spike_input: bool = False
     # Execution policy for every LIF/BN/matmul/attention site; derived
     # configs (Block/PSSA/SMLP/LIF) inherit it. See docs/EXECUTION.md.
     policy: ExecutionPolicy = ExecutionPolicy()
@@ -105,10 +110,29 @@ class SpikingFormerConfig:
             "image_size must be patch_grid * 2^k")
         return stages
 
-    def execution_site_specs(self) -> tuple[tuple[str, str, int | None], ...]:
-        """(site, op, pack_dim) for every dispatch site in this model —
-        the input to :func:`repro.core.policy.plan_sites`. ``pack_dim`` is
-        the contraction dimension a bit-packed implementation would pack.
+    def tokenizer_stage_channels(self) -> tuple[tuple[int, int], ...]:
+        """(c_in, c_out) for each eq. 4 tokenizer stage, in order."""
+        stages = self.tokenizer_stages
+        chans, c_in = [], self.in_channels
+        for i in range(stages):
+            c_out = self.d_model // (2 ** (stages - 1 - i))
+            chans.append((c_in, c_out))
+            c_in = c_out
+        return tuple(chans)
+
+    def execution_site_specs(self) -> tuple[tuple, ...]:
+        """(site, op, pack_dim[, spike_operand]) for every dispatch site in
+        this model — the input to :func:`repro.core.policy.plan_sites`.
+        ``pack_dim`` is the contraction dimension a bit-packed
+        implementation would pack; ``spike_operand`` says whether that
+        operand is {0,1}-valued at the site.
+
+        The tokenizer convs are per-stage sites (``tokenizer.conv.<i>``, a
+        group override ``"tokenizer.conv"`` covers them all): each stage
+        packs its im2col contraction ``k*k*c_in`` and only stages fed by
+        spikes (stage >= 2, plus stage 1 under ``spike_input``) qualify for
+        the packed arm — the first float-image stage demotes to the dense
+        im2col arm of the same fused pipeline as an *expected* decision.
 
         The attn sites only exist under ``qk_first=True``; the reassociated
         Q(K^T V) path is a dense-product einsum pair that never dispatches
@@ -124,8 +148,11 @@ class SpikingFormerConfig:
         # twin op, so the plan lists (and validates) those rows too.
         lif_ops = ("lif", "lif_state") if self.time_chunk else ("lif",)
         lif = lambda site: tuple((site, op, None) for op in lif_ops)  # noqa
-        return (
-            ("tokenizer.conv", "conv", None),
+        conv = tuple(
+            (f"tokenizer.conv.{i}", "conv", 9 * c_in,
+             self.spike_input if i == 0 else True)
+            for i, (c_in, _) in enumerate(self.tokenizer_stage_channels()))
+        return conv + (
             ("tokenizer.bn", "bn", None),
         ) + lif("tokenizer.lif") + lif("pssa.lif") + (
             ("pssa.qkv", "linear_bn", self.d_model),
@@ -139,15 +166,35 @@ class SpikingFormerConfig:
     def execution_plan(self):
         """Resolve the policy once against this model's shapes: one
         :class:`~repro.core.policy.SiteDecision` per site, with packing
-        fallbacks decided here rather than silently per call."""
-        return plan_sites(self.policy, self.execution_site_specs())
+        fallbacks decided here rather than silently per call.
+
+        Stages running a fused conv impl fold their BN into the
+        Conv->BN->LIF pipeline (RTFormer-style re-parameterization in
+        eval, the fused BN kernel in train), so the ``tokenizer.bn`` row
+        is annotated: "never dispatched" when every stage is fused,
+        otherwise naming how many stages still dispatch it.
+        """
+        rows = plan_sites(self.policy, self.execution_site_specs())
+        conv_rows = [r for r in rows if r.op == "conv"]
+        fused = [r for r in conv_rows if r.effective in FUSED_CONV_IMPLS]
+        if fused:
+            if len(fused) == len(conv_rows):
+                note = ("folded into the fused conv_bn_lif stages "
+                        "(never dispatched)")
+            else:
+                note = (f"folded at {len(fused)}/{len(conv_rows)} fused "
+                        f"conv_bn_lif stages (still dispatches at the "
+                        f"others)")
+            rows = [dataclasses.replace(r, note=note, expected=True)
+                    if r.site == "tokenizer.bn" else r for r in rows]
+        return rows
 
     def describe_execution(self, mesh=None) -> str:
         """The per-site dispatch table (printed by bench_model_table),
         followed by the sharding plan: the activation partition specs the
         model constrains to, and — when ``mesh`` is given — the effective
         parameter shardings (post sanitize + FSDP) on that mesh."""
-        out = self.policy.describe(self.execution_site_specs())
+        out = self.policy.describe(rows=self.execution_plan())
         return out + "\n\n" + self.describe_sharding(mesh)
 
     def describe_sharding(self, mesh=None) -> str:
@@ -178,12 +225,8 @@ class SpikingFormerConfig:
     def param_count(self) -> int:
         d, f = self.d_model, self.d_ff
         per_block = 4 * d * d + 2 * d * f + 10 * d + 2 * f
-        tok = 0
-        c_in = self.in_channels
-        for i in range(self.tokenizer_stages):
-            c_out = self.d_model // (2 ** (self.tokenizer_stages - 1 - i))
-            tok += 9 * c_in * c_out + 2 * c_out
-            c_in = c_out
+        tok = sum(9 * ci * co + 2 * co
+                  for ci, co in self.tokenizer_stage_channels())
         head = self.d_model * self.num_classes + self.num_classes
         return self.num_layers * per_block + tok + head
 
@@ -202,7 +245,9 @@ def activation_specs(cfg: SpikingFormerConfig
     replicated (its D is the sum of row-parallel outputs)."""
     return (
         ("images", P(None, BATCH, None, None, None)),     # (T,B,H,W,C)
-        ("tokenizer.stage", P(BATCH, None, None, None)),  # folded (T*B,H,W,C)
+        ("tokenizer.stage", P(None, BATCH, None, None, None)),  # (T,B,H,W,C)
+        ("tokenizer.stage.folded", P(BATCH, None, None, None)),  # (T*B,H,W,C)
+        ("tokenizer.patches", P(None, BATCH, None)),      # im2col (T,M,kkC)
         ("tokenizer.tokens", P(None, BATCH, None, None)),
         ("block.residual", ACT_SPECS["block.residual"]),
         ("pssa.qkv", ACT_SPECS["pssa.qkv"]),
@@ -262,8 +307,7 @@ def lif_residual_accounting(cfg: SpikingFormerConfig, batch: int
     t = cfg.time_steps
     rows = 0
     h = w = cfg.image_size
-    for i in range(cfg.tokenizer_stages):
-        c_out = cfg.d_model // (2 ** (cfg.tokenizer_stages - 1 - i))
+    for _, c_out in cfg.tokenizer_stage_channels():
         h, w = h // 2, w // 2
         rows += batch * h * w * c_out
     # per layer: PSSA scans x, q, k, v, out (5 d-wide) + SMLP scans x
@@ -292,7 +336,30 @@ def spikingformer_scan_dims(specs):
 
 # ---------------------------------------------------------------------------
 # Spiking Tokenizer: [Conv(k3,s2) -> BN -> LIF] x stages  (eq. 4)
+#
+# The ``conv`` registry op is one *full* eq. 4 stage on a time-major
+# (T, B, H, W, C) input, returning (spikes, new_state). Implementations:
+#
+# * ``"jnp"``           — the reference pipeline: dense XLA conv, then the
+#                         BN and LIF dispatched through their own sites
+#                         (``tokenizer.bn`` / ``tokenizer.lif``), i.e. three
+#                         kernels and two HBM-materialized intermediates.
+# * ``"pallas"``        — the fused conv_bn_lif pipeline, dense-im2col arm:
+#                         the conv lowers to one time-major matmul
+#                         (contraction k*k*c_in), BN is folded into the
+#                         weights/bias (eval) or handled by the fused BN
+#                         kernel in the same pass (train), and the matmul
+#                         output feeds the fused SOMA epilogue directly in
+#                         its (T, M, K) layout — ``tokenizer.bn`` never
+#                         dispatches as a separate kernel.
+# * ``"pallas_packed"`` — same pipeline with the im2col patches bit-packed
+#                         to 1 bit/element through the batched spike-matmul
+#                         kernel (spike inputs only; k*k*c_in % 8 == 0).
 # ---------------------------------------------------------------------------
+
+#: conv impls that run the fused conv_bn_lif pipeline (BN folded in).
+FUSED_CONV_IMPLS: frozenset[str] = frozenset({"pallas", "pallas_packed"})
+
 
 def _conv_init(key, c_in, c_out, dtype):
     w = jax.random.normal(key, (3, 3, c_in, c_out), dtype) * (9 * c_in) ** -0.5
@@ -300,50 +367,138 @@ def _conv_init(key, c_in, c_out, dtype):
 
 
 @register_kernel("conv", "jnp")
-def _conv_apply(params, x, policy=None, site="tokenizer.conv"):
-    # x: (TB, H, W, C) NHWC, stride-2 same-padded 3x3. Registered so a fused
-    # conv+BN+LIF Pallas kernel (ROADMAP) can plug in per site later.
-    return jax.lax.conv_general_dilated(
-        x, params["w"].astype(x.dtype), window_strides=(2, 2), padding="SAME",
-        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+def _conv_stage_jnp(params, state, x, lif_cfg, train, spike_in, policy,
+                    site):
+    """Reference eq. 4 stage: dense conv -> BN -> LIF, each stage sub-op
+    dispatched through the policy at its own site — the baseline the fused
+    conv_bn_lif parity tests compare against."""
+    t, b, h, w, c = x.shape
+    xf = shard(x.reshape(t * b, h, w, c), BATCH, None, None, None)
+    y = jax.lax.conv_general_dilated(
+        xf, params["conv"]["w"].astype(xf.dtype), window_strides=(2, 2),
+        padding="SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    # BN over (TB,H,W) per channel; LIF scans time, so unfold T.
+    y, bn_s = bn_apply(params["bn"], state["bn"], y, train=train,
+                       policy=policy, site="tokenizer.bn")
+    tb, hh, wh, ch = y.shape
+    spikes = lif_scan(y.reshape(t, b, hh, wh, ch), lif_cfg,
+                      site="tokenizer.lif")
+    return spikes, {"bn": bn_s}
+
+
+def conv_bn_lif_fused(params, state, x, lif_cfg, train, spike_in, policy,
+                      site, *, packed):
+    """Fused eq. 4 stage: im2col matmul + folded BN + fused LIF epilogue.
+
+    The k3/s2 conv lowers to a single time-major matmul ``patches (T, M,
+    k*k*c_in) @ w (k*k*c_in, c_out)``; with ``packed=True`` and a spike
+    input whose contraction is a multiple of 8, the patches ride the
+    bit-packed batched spike kernel (1 bit/element across HBM), otherwise
+    the dense einsum arm of the same pipeline runs (logged when that
+    disagrees with a packed request).
+
+    BN never dispatches at ``tokenizer.bn``: in eval it folds into the
+    matmul weights and a bias (RTFormer-style re-parameterization, exact
+    for running statistics); in train the batch statistics depend on the
+    conv output, so the fused BN kernel computes and applies them in its
+    single VMEM visit — the same split ``linear_bn_apply`` uses. The
+    matmul output is already in the (T, M, K) time-major layout the SOMA
+    kernel consumes, so the LIF epilogue (dispatched at ``tokenizer.lif``,
+    temporal tiling included) runs with no layout shuffle in between.
+    """
+    from repro.kernels import conv_spike, ops  # deferred: jnp path stays light
+
+    t, b, h, w, c = x.shape
+    patches = conv_spike.im2col(x.reshape(t * b, h, w, c))
+    tb, ho, wo, cdim = patches.shape
+    patches = shard(patches.reshape(t, b * ho * wo, cdim),
+                    None, BATCH, None)                      # (T, M, k*k*c_in)
+    w_mat = conv_spike.conv_w_matrix(params["conv"]["w"])
+    k_out = w_mat.shape[-1]
+    use_packed = packed and spike_in and cdim % 8 == 0
+    if packed and not use_packed:
+        reason = (f"im2col dim {cdim} % 8 != 0" if spike_in
+                  else "float (non-spike) input")
+        # A float first stage is a planned, structural demotion (INFO); a
+        # ragged contraction is a real constraint violation (WARNING).
+        runtime_fallback(site, "pallas_packed",
+                         reason + " -> dense im2col arm",
+                         expected=not spike_in)
+
+    def matmul(weights):
+        if use_packed:
+            return ops.spike_patch_mm_train_op(
+                patches, weights.astype(patches.dtype), policy.interpret)
+        return jnp.einsum("tmc,ck->tmk", patches,
+                          weights.astype(patches.dtype))
+
+    bn_p, bn_s = params["bn"], state["bn"]
+    if train:
+        # Batch statistics depend on the conv output, so the fused BN
+        # kernel computes and applies them in its one VMEM visit — the
+        # same _bn_pallas (and momentum/eps) the Conv1DBN sites use.
+        y, new_bn = _bn_pallas(bn_p, bn_s, matmul(w_mat), True, 0.9, 1e-5,
+                               policy, site)
+    else:
+        w_fold, bias = conv_spike.fold_bn(w_mat, bn_p["gamma"], bn_p["beta"],
+                                          bn_s["mean"], bn_s["var"])
+        y = matmul(w_fold) + bias.astype(patches.dtype)
+        new_bn = bn_s
+    spikes = lif_scan(y, lif_cfg, site="tokenizer.lif")     # (T, M, K)
+    return spikes.reshape(t, b, ho, wo, k_out), {"bn": new_bn}
+
+
+@register_kernel("conv", "pallas")
+def _conv_stage_im2col(params, state, x, lif_cfg, train, spike_in, policy,
+                       site):
+    """Dense-im2col arm of the fused conv_bn_lif pipeline (also the planned
+    fallback of ``pallas_packed`` on ragged or float-input stages)."""
+    return conv_bn_lif_fused(params, state, x, lif_cfg, train, spike_in,
+                             policy, site, packed=False)
+
+
+@register_kernel("conv", "pallas_packed")
+def _conv_stage_packed(params, state, x, lif_cfg, train, spike_in, policy,
+                       site):
+    """Bit-packed arm: im2col patches cross HBM at 1 bit/element through
+    the batched spike-matmul kernel (spike inputs, k*k*c_in % 8 == 0)."""
+    return conv_bn_lif_fused(params, state, x, lif_cfg, train, spike_in,
+                             policy, site, packed=True)
 
 
 def init_tokenizer(key, cfg: SpikingFormerConfig):
-    stages = cfg.tokenizer_stages
-    keys = jax.random.split(key, stages)
+    keys = jax.random.split(key, cfg.tokenizer_stages)
     params, states = [], []
-    c_in = cfg.in_channels
-    for i in range(stages):
-        c_out = cfg.d_model // (2 ** (stages - 1 - i))
+    for i, (c_in, c_out) in enumerate(cfg.tokenizer_stage_channels()):
         p_conv = _conv_init(keys[i], c_in, c_out, cfg.dtype)
         p_bn, s_bn = init_bn(c_out, cfg.dtype)
         params.append({"conv": p_conv, "bn": p_bn})
         states.append({"bn": s_bn})
-        c_in = c_out
     return params, states
 
 
 def tokenizer_apply(params, state, images, cfg: SpikingFormerConfig, *,
                     train: bool):
-    """images: (T, B, H, W, C) -> spike patches (T, B, N, D)."""
-    t, b, h, w, c = images.shape
-    x = images.reshape(t * b, h, w, c)
+    """images: (T, B, H, W, C) -> spike patches (T, B, N, D).
+
+    Each stage dispatches the full-stage ``conv`` op at its own site
+    (``tokenizer.conv.<i>``): the jnp reference runs Conv -> BN -> LIF as
+    three dispatches, the fused impls collapse the stage into one im2col
+    matmul (+ folded BN) feeding the SOMA epilogue. Stage 1 sees spikes
+    only under ``cfg.spike_input``; later stages always do (LIF outputs).
+    """
     pol = cfg.policy
-    conv = get_kernel("conv", pol.resolve("tokenizer.conv", "conv"))
+    x, spike_in = images, cfg.spike_input
     new_states = []
-    for p, s in zip(params, state):
-        x = shard(x, BATCH, None, None, None)
-        x = conv(p["conv"], x, pol, "tokenizer.conv")
-        # BN over (TB,H,W) per channel; LIF scans time, so unfold T.
-        y, s_bn = bn_apply(p["bn"], s["bn"], x, train=train,
-                           policy=pol, site="tokenizer.bn")
-        new_states.append({"bn": s_bn})
-        th, hh, wh, ch = y.shape
-        y = y.reshape(t, b, hh, wh, ch)
-        y = lif_scan(y, cfg.lif_cfg, site="tokenizer.lif")
-        x = y.reshape(t * b, hh, wh, ch)
-    x = x.reshape(t, b, -1, x.shape[-1])       # (T, B, N, D)
-    return x, new_states
+    for i, (p, s) in enumerate(zip(params, state)):
+        site = f"tokenizer.conv.{i}"
+        conv = get_kernel("conv", pol.resolve(site, "conv"))
+        x = shard(x, None, BATCH, None, None, None)
+        x, s_new = conv(p, s, x, cfg.lif_cfg, train, spike_in, pol, site)
+        new_states.append(s_new)
+        spike_in = True                        # LIF output feeds stage i+1
+    t, b = x.shape[:2]
+    return x.reshape(t, b, -1, x.shape[-1]), new_states
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,106 @@
+"""im2col lowering for the spiking tokenizer convs (E2ATST eq. 4).
+
+Every tokenizer stage is a k3/s2 SAME conv whose input — after the first
+stage — is a binary LIF spike train. E2ATST's energy model says that
+workload is accumulate-only; on TPU the win is realized the same way the
+PSSA matmuls realize it: lower the conv to a matmul whose contraction axis
+is ``k*k*c_in`` (im2col) and ride the bit-packed spike kernel, so the spike
+operand crosses HBM at 1 bit/element and is unpacked to the MXU inside
+VMEM.
+
+This module holds the pure lowering pieces:
+
+* :func:`im2col` — (N, H, W, C) -> (N, Ho, Wo, k*k*C) patch extraction with
+  XLA-SAME padding, offset-major feature order (matches
+  :func:`conv_w_matrix`). Plain jnp slicing, so autodiff produces the exact
+  conv input-gradient (pad/slice scatter-add).
+* :func:`conv_w_matrix` — HWIO conv weights -> the (k*k*C, K) matmul
+  operand.
+* :func:`fold_bn` — RTFormer-style BN re-parameterization: fold the BN
+  scale/shift into the conv weight matrix and a bias, so eval-mode
+  Conv->BN collapses into one matmul (+bias) and ``tokenizer.bn`` vanishes
+  as a dispatch.
+* :func:`spike_patch_matmul` — the packed spike-conv matmul, time-major:
+  the T axis rides the batched kernel's batch axis so the output lands in
+  the (T, M, K) layout the fused SOMA epilogue consumes directly.
+
+The differentiable wrapper (``spike_patch_mm_train_op``) lives in
+:mod:`repro.kernels.ops` next to its dense-einsum VJP twin
+``spike_bmm_train_op``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.spike_matmul import spike_matmul_packed_batched, spike_pack
+
+
+def same_padding(size: int, kernel: int, stride: int) -> tuple[int, int]:
+    """XLA "SAME" (lo, hi) padding for one spatial dim."""
+    out = -(-size // stride)                       # ceil
+    total = max((out - 1) * stride + kernel - size, 0)
+    return total // 2, total - total // 2
+
+
+def im2col(x: jax.Array, *, kernel: int = 3, stride: int = 2) -> jax.Array:
+    """(N, H, W, C) -> (N, Ho, Wo, kernel*kernel*C) SAME-padded patches.
+
+    Feature order is offset-major, channel-minor — patch feature
+    ``(dy*kernel + dx) * C + c`` holds input pixel ``(dy, dx, c)`` of the
+    window — matching ``conv_w_matrix``'s reshape of HWIO weights, so
+    ``im2col(x) @ conv_w_matrix(w)`` equals the stride-``stride`` SAME conv.
+    Zero padding keeps {0,1} spike inputs binary.
+    """
+    n, h, w, c = x.shape
+    (plo_h, phi_h), (plo_w, phi_w) = (same_padding(h, kernel, stride),
+                                      same_padding(w, kernel, stride))
+    ho, wo = -(-h // stride), -(-w // stride)
+    xp = jnp.pad(x, ((0, 0), (plo_h, phi_h), (plo_w, phi_w), (0, 0)))
+    cols = [xp[:, dy: dy + stride * (ho - 1) + 1: stride,
+               dx: dx + stride * (wo - 1) + 1: stride, :]
+            for dy in range(kernel) for dx in range(kernel)]
+    return jnp.concatenate(cols, axis=-1)
+
+
+def conv_w_matrix(w: jax.Array) -> jax.Array:
+    """HWIO conv weights (k, k, C_in, C_out) -> (k*k*C_in, C_out)."""
+    kh, kw, ci, co = w.shape
+    return w.reshape(kh * kw * ci, co)
+
+
+def fold_bn(w_mat: jax.Array, gamma: jax.Array, beta: jax.Array,
+            mean: jax.Array, var: jax.Array,
+            eps: float = 1e-5) -> tuple[jax.Array, jax.Array]:
+    """Fold BN scale/shift into the conv matmul (RTFormer re-param).
+
+    ``BN(x @ w) == x @ (w * s) + (beta - mean * s)`` with
+    ``s = gamma / sqrt(var + eps)`` — per output channel, so the fold is a
+    column scale of ``w_mat`` plus a bias. Exact for *fixed* statistics
+    (eval mode / running stats); training-mode batch statistics depend on
+    the conv output and are handled by the fused BN kernel instead
+    (see ``repro.core.spikingformer.conv_bn_lif_fused``).
+    Statistics stay fp32; the fold result is cast by the caller.
+    """
+    scale = (gamma.astype(jnp.float32)
+             / jnp.sqrt(var.astype(jnp.float32) + eps))
+    w_folded = w_mat.astype(jnp.float32) * scale[None, :]
+    bias = beta.astype(jnp.float32) - mean.astype(jnp.float32) * scale
+    return w_folded, bias
+
+
+def spike_patch_matmul(patches: jax.Array, w: jax.Array, *,
+                       interpret: bool = True) -> jax.Array:
+    """Bit-packed spike-conv matmul: (T, M, C) {0,1} x (C, K) -> (T, M, K).
+
+    Packs the im2col patch rows to 1 bit/element and runs the batched
+    Pallas kernel with the time axis as the batch axis — the shared weight
+    is broadcast over T (T is small; per-tile fetches see one (bc, bk)
+    block either way) and the output stays time-major, exactly the
+    (T, M, D) layout the fused SOMA kernel takes with no transpose between
+    matmul and LIF epilogue. C (= k*k*c_in) must be a multiple of 8.
+    """
+    t = patches.shape[0]
+    wb = jnp.broadcast_to(w[None], (t,) + w.shape)
+    return spike_matmul_packed_batched(spike_pack(patches), wb,
+                                       interpret=interpret)

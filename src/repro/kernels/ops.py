@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.backend import resolve_interpret
-from repro.kernels import fused_bn, lif_soma, spike_matmul
+from repro.kernels import conv_spike, fused_bn, lif_soma, spike_matmul
 
 
 @partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5, 6))
@@ -196,6 +196,43 @@ def _sbmm_bwd(interpret, res, g):
 
 
 spike_bmm_train_op.defvjp(_sbmm_fwd, _sbmm_bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2,))
+def spike_patch_mm_train_op(patches: jax.Array, w: jax.Array,
+                            interpret: bool | None = None) -> jax.Array:
+    """Differentiable time-major im2col spike-conv matmul:
+    (T, M, C) {0,1} patches x (C, K) shared weight -> (T, M, K).
+
+    The tokenizer's eq. 4 conv after the im2col lowering: stage >= 2 patch
+    rows are binary LIF outputs, so FP packs them to 1 bit/element and runs
+    the batched Pallas kernel with T as the batch axis (the output stays in
+    the (T, M, K) layout the fused SOMA epilogue consumes). BP is the dense
+    einsum VJP of the shared-weight batched matmul — dW reduces over T, and
+    dPatches feeds the upstream LIF surrogate through the im2col slices'
+    own (exact) scatter-add transpose. C (= k*k*c_in) must be a multiple
+    of 8.
+    """
+    return conv_spike.spike_patch_matmul(
+        patches, w, interpret=resolve_interpret(interpret))
+
+
+def _spmm_fwd(patches, w, interpret):
+    out = conv_spike.spike_patch_matmul(
+        patches, w, interpret=resolve_interpret(interpret))
+    return out, (patches, w)
+
+
+def _spmm_bwd(interpret, res, g):
+    patches, w = res
+    d_patches = jnp.einsum("tmk,ck->tmc", g,
+                           w.astype(g.dtype)).astype(patches.dtype)
+    d_w = jnp.einsum("tmc,tmk->ck", patches.astype(g.dtype),
+                     g).astype(w.dtype)
+    return d_patches, d_w
+
+
+spike_patch_mm_train_op.defvjp(_spmm_fwd, _spmm_bwd)
 
 
 def spike_matmul_op(spikes: jax.Array, w: jax.Array,

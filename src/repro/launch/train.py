@@ -154,7 +154,8 @@ def train_vision(cfg, *, steps: int, global_batch: int,
 
     data = SyntheticVision(VisionDataConfig(
         image_size=cfg.image_size, num_classes=cfg.num_classes,
-        global_batch=global_batch, channels=cfg.in_channels, seed=seed))
+        global_batch=global_batch, channels=cfg.in_channels, seed=seed,
+        spikes=cfg.spike_input))
     # microbatches != 1 raises in the factory (BN stats are per-global-batch)
     step_fn = make_train_step(cfg, opt_cfg, microbatches, mesh=mesh)
     jit_step = jax.jit(step_fn, donate_argnums=(0, 1, 2))

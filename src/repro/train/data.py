@@ -67,6 +67,11 @@ class VisionDataConfig:
     global_batch: int
     channels: int = 3
     seed: int = 1234
+    # Emit {0,1} spike frames (DVS-style event data) by thresholding the
+    # blob images. Models with ``spike_input=True`` assert a binary input
+    # contract — the bit-packed first-stage conv packs raw values — so
+    # their synthetic stream must actually honour it.
+    spikes: bool = False
 
 
 class SyntheticVision:
@@ -98,6 +103,8 @@ class SyntheticVision:
             y0 = (int(lab) // 2) * half
             x0 = (int(lab) % 2) * half
             imgs[i, y0:y0 + half, x0:x0 + half] += 1.0
+        if cfg.spikes:   # blob pixels (~1.0) fire, background noise doesn't
+            imgs = (imgs > 0.5).astype(np.float32)
         return {"images": imgs, "labels": labels}
 
     def iterator(self, start_step: int = 0, host_index: int = 0,

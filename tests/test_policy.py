@@ -167,7 +167,7 @@ def test_with_backend_jnp_drops_pallas_overrides():
     with pytest.warns(DeprecationWarning):
         back = cfg.with_backend("jnp")
     assert back.policy.overrides == ()
-    for site, op, _ in cfg.execution_site_specs():
+    for site, op, *_ in cfg.execution_site_specs():
         assert back.policy.resolve(site, op) == "jnp"
     # the PR 1 round-trip: pallas+spike_mm then back to jnp == plain jnp
     with pytest.warns(DeprecationWarning):
@@ -229,10 +229,18 @@ def test_plan_resolves_packing_fallback_once():
     av = rows["attn_av"]                         # packs num_tokens = 16: OK
     assert av.effective == "pallas_packed" and av.note == ""
     assert rows["smlp.b"].effective == "pallas"  # packs d_ff = 20
+    # Per-stage tokenizer conv decisions: stage 1 demotes for its float
+    # input (structural, expected); stage 2 packs 9*18 = 162 — a ragged
+    # contraction, a real (unexpected) constraint violation.
+    c0, c1 = rows["tokenizer.conv.0"], rows["tokenizer.conv.1"]
+    assert c0.requested == "pallas_packed" and c0.effective == "pallas"
+    assert "non-spike" in c0.note and c0.expected
+    assert c1.requested == "pallas_packed" and c1.effective == "pallas"
+    assert "% 8" in c1.note and not c1.expected
 
     table = cfg.describe_execution()
     assert "pssa.qkv" in table and "attn_qk" in table
-    assert "pallas+spike_mm" in table
+    assert "pallas+spike_mm" in table and "tokenizer.conv.1" in table
 
 
 def test_plan_rejects_unregistered_impl():
@@ -266,9 +274,47 @@ def test_plan_excludes_attn_sites_when_kv_first():
 
 
 def test_aligned_plan_has_no_fallbacks():
+    """Well-shaped config: no *unexpected* fallback anywhere. The two
+    expected structural notes are the float-image first tokenizer stage
+    (demotes to the dense im2col arm of the fused pipeline) and the
+    tokenizer.bn fold annotation."""
     cfg = get_spikingformer_config("spikingformer-smoke@pallas-full")
-    assert all(r.note == "" and r.effective == r.requested
-               for r in cfg.execution_plan())
+    rows = {r.site: r for r in cfg.execution_plan()}
+    assert all(r.note == "" or r.expected for r in rows.values())
+    assert rows["tokenizer.conv.0"].effective == "pallas"     # float images
+    assert rows["tokenizer.conv.0"].expected
+    assert rows["tokenizer.conv.1"].effective == "pallas_packed"
+    assert rows["tokenizer.conv.1"].note == ""
+    assert "folded" in rows["tokenizer.bn"].note
+
+
+def test_spike_input_first_stage_packs():
+    """Pre-encoded spike frames (DVS-style) with c_in % 8 == 0 let stage 1
+    ride the packed conv too — no demotion note anywhere in the tokenizer."""
+    import dataclasses as dc
+    cfg = dc.replace(get_spikingformer_config(
+        "spikingformer-smoke@pallas-full"), in_channels=8, spike_input=True)
+    rows = {r.site: r for r in cfg.execution_plan() if r.op == "conv"}
+    assert all(r.effective == "pallas_packed" and r.note == ""
+               for r in rows.values())
+
+
+def test_group_prefix_override_covers_stage_sites():
+    """A "tokenizer.conv" group override reaches every per-stage site and
+    passes the typo check (prefix matching), while a bogus prefix fails."""
+    cfg = get_spikingformer_config("spikingformer-smoke")
+    pol = named_policy("pallas").with_sites({"tokenizer.conv": "pallas"})
+    assert pol.resolve("tokenizer.conv.0", "conv") == "pallas"
+    assert pol.resolve("tokenizer.conv.1", "conv") == "pallas"
+    rows = {r.site: r for r in cfg.with_policy(pol).execution_plan()}
+    assert rows["tokenizer.conv.1"].effective == "pallas"
+    # exact-site override beats the group prefix
+    pol2 = pol.with_sites({"tokenizer.conv.0": "jnp"})
+    assert pol2.resolve("tokenizer.conv.0", "conv") == "jnp"
+    assert pol2.resolve("tokenizer.conv.1", "conv") == "pallas"
+    with pytest.raises(ValueError, match="tokenizer.cnv"):
+        cfg.with_policy(named_policy("pallas").with_sites(
+            {"tokenizer.cnv": "pallas"})).execution_plan()
 
 
 # ---------------------------------------------------------------------------
