@@ -13,8 +13,8 @@ from repro.kernels.spike_matmul import spike_pack
 
 
 def _time(fn, *args, reps=3) -> float:
-    fn(*args)                      # compile/warm
-    t0 = time.perf_counter()
+    jax.block_until_ready(fn(*args))   # compile/warm (block: async dispatch
+    t0 = time.perf_counter()           # must not leak into the first rep)
     for _ in range(reps):
         jax.block_until_ready(fn(*args))
     return (time.perf_counter() - t0) / reps * 1e6
@@ -72,6 +72,57 @@ def run(smoke: bool = False) -> list[str]:
     lines.append(f"fused_bn_fwd,{us:.0f},ref={ref_us:.0f}us")
 
     lines += conv_rows(smoke=smoke, reps=reps)
+    lines += neuron_layer_rows(smoke=smoke, reps=reps)
+    return lines
+
+
+def neuron_layer_rows(smoke: bool = False, reps: int = 3) -> list[str]:
+    """Single-launch neuron-layer megakernel (matmul + BN + SOMA in ONE
+    pallas_call) vs the 3-launch pipeline it replaces in the pallas-full
+    plan (packed spike matmul -> fused BN -> fused SOMA, two HBM
+    round-trips of the (T, M, K) pre-activation in between)."""
+    from repro.kernels.conv_spike import fold_bn
+
+    t, m, c, k = (2, 128, 64, 128) if smoke else (4, 512, 256, 512)
+    key = jax.random.PRNGKey(7)
+    x = (jax.random.uniform(key, (t, m, c)) < 0.2).astype(jnp.float32)
+    w = jax.random.normal(key, (c, k)) / c ** 0.5
+    gamma, beta = jnp.ones((k,)), jnp.zeros((k,))
+
+    # interpret=None everywhere: auto-resolves per backend, so on a TPU
+    # host every row below times the compiled kernels, not the emulator.
+    def fused_train(xx):
+        return ops.neuron_layer_train_op(xx, w, gamma, beta, 0.5, 1.0, 0.0,
+                                         2.0, 1.0, 1e-5, True, None)[0]
+
+    def pipeline_train(xx):
+        z = ops.spike_matmul_train_op(xx.reshape(t * m, c), w, None)
+        y, _, _ = ops.bn_train_op(z, gamma, beta, 1e-5, None)
+        return ops.lif_soma_op(y.reshape(t, m, k), 0.5, 1.0, 0.0, 2.0, 1.0,
+                               None)
+
+    us_f = _time(jax.jit(fused_train), x, reps=reps)
+    us_p = _time(jax.jit(pipeline_train), x, reps=reps)
+    lines = [f"neuron_layer_fused_train,{us_f:.0f},"
+             f"three_launch={us_p:.0f}us;launches=3->1"]
+
+    w_f, bias = fold_bn(w, gamma, beta, jnp.zeros((k,)), jnp.ones((k,)))
+    w_f = w_f.astype(x.dtype)
+
+    def fused_eval(xx):
+        return ops.neuron_layer_eval_op(xx, w_f, bias, 0.5, 1.0, 0.0, 2.0,
+                                        1.0, True, None)
+
+    def pipeline_eval(xx):
+        z = ops.spike_matmul_train_op(xx.reshape(t * m, c), w_f, None)
+        z = z + bias.astype(z.dtype)
+        return ops.lif_soma_op(z.reshape(t, m, k), 0.5, 1.0, 0.0, 2.0, 1.0,
+                               None)
+
+    us_fe = _time(jax.jit(fused_eval), x, reps=reps)
+    us_pe = _time(jax.jit(pipeline_eval), x, reps=reps)
+    lines.append(f"neuron_layer_fused_eval,{us_fe:.0f},"
+                 f"two_launch={us_pe:.0f}us;bn_folded=weights+bias")
     return lines
 
 

@@ -229,6 +229,10 @@ def lif_scan(x_seq: jax.Array, cfg: LIFConfig, site: str = "lif") -> jax.Array:
     tokenizer pipeline (``conv_bn_lif``) dispatches here as its SOMA
     epilogue with the matmul output already in the (T, M, D) time-major
     layout the fused kernel consumes — the fold below is then a no-op.
+    Under a ``"fused_epilogue"`` policy the matmul-fed SN sites never reach
+    this function at all: the SOMA runs *inside* the single-launch
+    neuron-layer megakernel (``kernels/neuron_layer.py``), and only the
+    residual-stream/attention-output scans still dispatch here.
 
     With ``cfg.time_chunk`` set (and < T), the scan is temporally tiled:
     chunks of that length run the stateful kernel under ``jax.checkpoint``

@@ -95,6 +95,29 @@ def packed_fallback(op: str, impl: str) -> str | None:
     return _PACKED_OP_FALLBACK.get((op, impl), PACKED_IMPL_FALLBACK.get(impl))
 
 
+#: Implementations that run the single-launch neuron-layer megakernel
+#: (matmul + BN + SOMA in one Pallas kernel). Packing constraints do NOT
+#: demote these away — the megakernel has a dense arm, so a ragged or
+#: float-operand site keeps the single launch and only loses the bit-packed
+#: HBM traffic (annotated in the plan). What *does* demote them is the site
+#: itself: a ``linear_bn`` site with no trailing LIF (the Z-projection and
+#: SMLP-B sites feed residual adds, not an SN) has no SOMA to fuse.
+FUSED_EPILOGUE_IMPLS: frozenset[str] = frozenset({"fused_epilogue"})
+
+#: (op, impl) -> demotion target at sites that structurally cannot host the
+#: fused epilogue (no trailing LIF). Every conv site IS a Conv->BN->LIF
+#: stage, so only linear_bn sites appear here.
+_FUSED_EPILOGUE_FALLBACK: dict[tuple[str, str], str] = {
+    ("linear_bn", "fused_epilogue"): "pallas+spike_mm",
+}
+
+
+def fused_epilogue_fallback(op: str, impl: str) -> str | None:
+    """The pipeline (multi-launch) fallback for a fused-epilogue impl at a
+    site with no trailing LIF (``None`` when ``impl`` is not one)."""
+    return _FUSED_EPILOGUE_FALLBACK.get((op, impl))
+
+
 def default_impl(op: str, backend: str) -> str:
     try:
         return _DEFAULT_IMPL[(op, validate_backend(backend))]
@@ -204,18 +227,24 @@ class SiteDecision:
 def plan_sites(policy: ExecutionPolicy,
                site_specs: Sequence[tuple],
                *, check_registry: bool = True) -> list[SiteDecision]:
-    """Resolve every site once and report packing fallbacks.
+    """Resolve every site once and report packing/fusion fallbacks.
 
-    ``site_specs`` is a sequence of ``(site, op, pack_dim)`` or ``(site,
-    op, pack_dim, spike_operand)``: ``pack_dim`` is the contraction
-    dimension a bit-packed implementation would pack (``None`` when the op
-    has no packing constraint) and ``spike_operand`` (default ``True``)
-    says whether the operand a packed impl would pack is {0,1}-valued at
-    that site. A packed impl with a float operand demotes to its dense
-    fallback as an *expected* (structural) decision; one whose
-    ``pack_dim % 8 != 0`` is resolved to the same fallback as a reported
-    constraint violation. Both are decided *here* — the per-call path then
-    only logs if it ever still disagrees (it should not).
+    ``site_specs`` is a sequence of ``(site, op, pack_dim)``, ``(site, op,
+    pack_dim, spike_operand)`` or ``(site, op, pack_dim, spike_operand,
+    trailing_lif)``: ``pack_dim`` is the contraction dimension a bit-packed
+    implementation would pack (``None`` when the op has no packing
+    constraint), ``spike_operand`` (default ``True``) says whether the
+    operand a packed impl would pack is {0,1}-valued at that site, and
+    ``trailing_lif`` (default ``True``) says whether the site is followed
+    by an SN a fused-epilogue impl could absorb. A packed impl with a float
+    operand demotes to its dense fallback as an *expected* (structural)
+    decision; one whose ``pack_dim % 8 != 0`` is resolved to the same
+    fallback as a reported constraint violation. A fused-epilogue impl at a
+    no-trailing-LIF site demotes to its pipeline fallback (structural,
+    expected); at servable sites it never demotes for packing — the
+    megakernel keeps the single launch and the note only records the dense
+    arm. All of it is decided *here* — the per-call path then only logs if
+    it ever still disagrees (it should not).
 
     With ``check_registry=True`` every effective implementation must exist
     in the registry, and every override key must match one of the planned
@@ -228,17 +257,34 @@ def plan_sites(policy: ExecutionPolicy,
     for spec in site_specs:
         site, op, dim = spec[0], spec[1], spec[2]
         spike_operand = spec[3] if len(spec) > 3 else True
+        trailing_lif = spec[4] if len(spec) > 4 else True
         requested = policy.resolve(site, op)
-        effective, note, expected = requested, "", False
-        fb = packed_fallback(op, requested)
+        effective, notes, violation = requested, [], False
+        ffb = fused_epilogue_fallback(op, requested)
+        if ffb is not None and not trailing_lif:
+            effective = ffb
+            notes.append(f"no trailing LIF at this site -> {ffb}")
+        fb = packed_fallback(op, effective)
         if fb is not None:
             if not spike_operand:
                 effective = fb
-                note = f"float (non-spike) operand -> {fb}"
-                expected = True
+                notes.append(f"float (non-spike) operand -> {fb}")
             elif dim is not None and dim % 8 != 0:
                 effective = fb
-                note = f"pack dim {dim} % 8 != 0 -> {fb}"
+                notes.append(f"pack dim {dim} % 8 != 0 -> {fb}")
+                violation = True
+        elif effective in FUSED_EPILOGUE_IMPLS:
+            # No demotion: the megakernel's dense arm serves the site in
+            # the same single launch; only the packed HBM traffic is lost.
+            if not spike_operand:
+                notes.append("float (non-spike) operand -> dense arm "
+                             "(still fused)")
+            elif dim is not None and dim % 8 != 0:
+                notes.append(f"pack dim {dim} % 8 != 0 -> dense arm "
+                             f"(still fused)")
+                violation = True
+        note = "; ".join(notes)
+        expected = bool(notes) and not violation
         if check_registry:
             get_kernel(op, effective)   # raises on unknown impl
         rows.append(SiteDecision(site, op, requested, effective, note,
@@ -321,6 +367,13 @@ def register_kernel(op: str, impl: str) -> Callable:
                       time-major (T, B, H, W, C) input; ``spike_in`` says
                       whether ``x`` is {0,1}-valued (stage >= 2, or stage 1
                       on pre-encoded spike frames)
+
+    Exception: the ``"fused_epilogue"`` implementation of ``linear_bn``
+    absorbs the *following* SN into its single-launch megakernel, so it is
+    registered with the extended signature ``fn(params, state, x, lif_cfg,
+    train, policy, site) -> (spikes, new_state)`` and is only dispatched
+    through ``linear_bn_lif_apply`` (plain ``linear_bn_apply`` demotes it,
+    logged, to its pipeline fallback — there is no LIF to fuse there).
     """
     def deco(fn: Callable) -> Callable:
         _REGISTRY[(op, impl)] = fn
@@ -359,14 +412,16 @@ def _ensure_builtins() -> None:
 # Named policies + environment default
 # ---------------------------------------------------------------------------
 
-#: Everything-on policy: fused LIF/BN kernels, packed spike matmul at every
-#: Conv1DBN site, the packed (QK^T)V attention path, and the fused im2col
-#: spike-conv tokenizer (Conv->BN->LIF collapsed per eq. 4 stage; float-input
-#: stages ride the dense-im2col arm of the same fused pipeline).
+#: Everything-on policy: fused LIF/BN kernels, the packed (QK^T)V attention
+#: path, and the single-launch neuron-layer megakernel (bit-packed/dense
+#: matmul + BN + SOMA in ONE Pallas kernel) at every Conv1DBN-with-SN site
+#: and every eq. 4 tokenizer stage. Sites with no trailing LIF (Z
+#: projection, SMLP-B) demote to the pipeline ``pallas+spike_mm`` arm as a
+#: planned structural decision.
 _PALLAS_FULL = ExecutionPolicy(
     backend="pallas",
     overrides=(("attn_av", "pallas_packed"), ("attn_qk", "pallas_packed"),
-               ("conv", "pallas_packed"), ("linear_bn", "pallas+spike_mm")))
+               ("conv", "fused_epilogue"), ("linear_bn", "fused_epilogue")))
 
 NAMED_POLICIES: dict[str, ExecutionPolicy] = {
     "jnp": ExecutionPolicy(),
@@ -402,7 +457,8 @@ def default_policy() -> ExecutionPolicy:
 #: Implementations that only exist under the pallas backend — the legacy
 #: shim must drop these when bridging to backend="jnp" (under PR 1
 #: semantics, backend="jnp" ran the dense jnp path regardless of spike_mm).
-_PALLAS_ONLY_IMPLS = frozenset({"pallas", "pallas+spike_mm", "pallas_packed"})
+_PALLAS_ONLY_IMPLS = frozenset({"pallas", "pallas+spike_mm", "pallas_packed",
+                                "fused_epilogue"})
 
 
 def policy_from_flags(backend: str | None = None,
@@ -427,10 +483,21 @@ def policy_from_flags(backend: str | None = None,
         overrides=tuple(ov.items()))
 
 
-def warn_deprecated_flags(what: str) -> None:
+def warn_deprecated_flags(what: str, stacklevel: int = 2) -> None:
+    """Emit the legacy-flag DeprecationWarning, attributed to *user* code.
+
+    ``stacklevel`` counts the frames between this helper and the user's
+    call site: 2 (the default) points at the caller of whatever function
+    invoked this — right for the direct shims (``with_backend``,
+    ``get_spikingformer_config(backend=...)``). Deeper shims pass their own
+    depth (e.g. the frozen-config ``__post_init__`` path adds the dataclass
+    ``__init__`` and ``__post_init__`` frames), so the warning filename is
+    the user's file, not a repro internal — the shim tests assert this.
+    """
     warnings.warn(
         f"{what} is deprecated; pass policy=ExecutionPolicy(...) "
-        f"(see docs/EXECUTION.md)", DeprecationWarning, stacklevel=3)
+        f"(see docs/EXECUTION.md)", DeprecationWarning,
+        stacklevel=stacklevel + 1)
 
 
 def apply_legacy_exec_flags(cfg: Any, backend: str | None,
@@ -440,17 +507,18 @@ def apply_legacy_exec_flags(cfg: Any, backend: str | None,
     PR 1 kwargs: folds them into ``cfg.policy`` with a DeprecationWarning."""
     if backend is None and spike_mm is None and interpret is None:
         return
+    # user -> dataclass __init__ -> __post_init__ -> here: 4 frames up.
     warn_deprecated_flags(
-        f"{type(cfg).__name__}(backend=/spike_mm=/interpret=)")
+        f"{type(cfg).__name__}(backend=/spike_mm=/interpret=)", stacklevel=4)
     object.__setattr__(cfg, "policy", policy_from_flags(
         backend, spike_mm, interpret, base=cfg.policy))
 
 
 __all__ = [
-    "BACKENDS", "ExecutionPolicy", "NAMED_POLICIES", "OPS", "SiteDecision",
-    "apply_legacy_exec_flags", "available_impls", "default_impl",
-    "default_policy", "get_kernel", "list_named_policies", "log_fallbacks",
-    "named_policy", "packed_fallback", "plan_sites", "policy_from_flags",
-    "register_kernel", "runtime_fallback", "unregister_kernel",
-    "warn_deprecated_flags",
+    "BACKENDS", "ExecutionPolicy", "FUSED_EPILOGUE_IMPLS", "NAMED_POLICIES",
+    "OPS", "SiteDecision", "apply_legacy_exec_flags", "available_impls",
+    "default_impl", "default_policy", "fused_epilogue_fallback", "get_kernel",
+    "list_named_policies", "log_fallbacks", "named_policy", "packed_fallback",
+    "plan_sites", "policy_from_flags", "register_kernel", "runtime_fallback",
+    "unregister_kernel", "warn_deprecated_flags",
 ]

@@ -19,6 +19,7 @@ Conventions
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any
 
 import jax
@@ -26,10 +27,12 @@ import jax.numpy as jnp
 
 from jax.sharding import PartitionSpec as P
 
-from repro.core.backend import fold_rows
+from repro.core.backend import fold_rows, fold_time_major
 from repro.core.lif import LIFConfig, lif_scan
-from repro.core.policy import (ExecutionPolicy, apply_legacy_exec_flags,
-                               get_kernel, policy_from_flags, register_kernel,
+from repro.core.policy import (ExecutionPolicy, FUSED_EPILOGUE_IMPLS,
+                               apply_legacy_exec_flags,
+                               fused_epilogue_fallback, get_kernel,
+                               policy_from_flags, register_kernel,
                                runtime_fallback)
 from repro.models.common import BATCH, MODEL, shard
 
@@ -56,7 +59,8 @@ def _legacy_policy(policy: ExecutionPolicy | None, backend: str | None,
     """Fold deprecated per-call flags into a policy (warning when used)."""
     if backend is not None or spike_mm is not None or interpret is not None:
         from repro.core.policy import warn_deprecated_flags
-        warn_deprecated_flags(what)
+        # user -> bn_apply/linear_bn_apply -> here: 3 frames up.
+        warn_deprecated_flags(what, stacklevel=3)
         return policy_from_flags(backend, spike_mm, interpret,
                                  base=policy or ExecutionPolicy())
     return policy if policy is not None else ExecutionPolicy()
@@ -195,6 +199,84 @@ def _linear_bn_spike_mm(params, state, x, train, policy, site):
     return y, {"bn": bn_s}
 
 
+def _train_arm_exceeds_vmem(x, k_out, packed, policy, site) -> bool:
+    """Capacity guard for the train-mode megakernel on real hardware: its
+    BN-statistics constraint pins all T*M rows to one program, so at large
+    M the accumulator outgrows VMEM where the M-tiled pipeline still fits.
+    ``packed`` must be the arm the caller will actually run (a dense-arm x
+    tile is 32x a packed one). Interpret mode (every CPU/CI run) has no
+    such limit and always stays fused; on a compiling backend the demotion
+    is logged (INFO — a planned capacity decision, like the structural
+    ones)."""
+    from repro.core.backend import resolve_interpret
+    from repro.kernels import neuron_layer
+
+    if resolve_interpret(policy.interpret):
+        return False
+    t, m, c = x.shape[0], math.prod(x.shape[1:-1]), x.shape[-1]
+    est = neuron_layer.train_arm_vmem_bytes(t, m, c, k_out, packed=packed)
+    if est <= neuron_layer.TRAIN_ARM_VMEM_BUDGET:
+        return False
+    runtime_fallback(
+        site, "fused_epilogue",
+        f"train-arm VMEM estimate {est >> 20} MiB > "
+        f"{neuron_layer.TRAIN_ARM_VMEM_BUDGET >> 20} MiB "
+        f"(all T*M rows per program) -> pipeline", expected=True)
+    return True
+
+
+def _neuron_layer_site(x3, w_mat, bn_p, bn_s, lif_cfg, train, packed,
+                       interpret):
+    """Shared fused-epilogue core: ``x3 (T, M, C) @ w_mat (C, K)`` + BN +
+    SOMA in ONE Pallas launch (``kernels/neuron_layer.py``). Train mode
+    computes the batch statistics in-kernel and blends the running stats
+    (momentum 0.9, like ``_bn_pallas``); eval folds BN into the weights and
+    a bias RTFormer-style. Returns ``(spikes (T, M, K), new_bn_state)``."""
+    from repro.kernels import conv_spike, ops  # deferred: jnp path stays light
+
+    lif = lif_cfg
+    if train:
+        spikes, mu, var = ops.neuron_layer_train_op(
+            x3, w_mat.astype(x3.dtype), bn_p["gamma"], bn_p["beta"],
+            lif.alpha, lif.th_fire, lif.th_lo, lif.th_hi, lif.grad_scale,
+            1e-5, packed, interpret)
+        new_bn = {"mean": 0.9 * bn_s["mean"] + 0.1 * mu,
+                  "var": 0.9 * bn_s["var"] + 0.1 * var}
+        return spikes, new_bn
+    w_fold, bias = conv_spike.fold_bn(w_mat, bn_p["gamma"], bn_p["beta"],
+                                      bn_s["mean"], bn_s["var"])
+    spikes = ops.neuron_layer_eval_op(
+        x3, w_fold.astype(x3.dtype), bias, lif.alpha, lif.th_fire, lif.th_lo,
+        lif.th_hi, lif.grad_scale, packed, interpret)
+    return spikes, bn_s
+
+
+@register_kernel("linear_bn", "fused_epilogue")
+def _linear_bn_fused_epilogue(params, state, x, lif_cfg, train, policy, site):
+    """Single-launch neuron layer: bit-packed (or dense) spike matmul +
+    BatchNorm + SOMA in ONE Pallas kernel — the (T, M, K) pre-activation
+    never exists in HBM, and the backward replays it through the GRAD
+    kernel instead of storing per-step residuals.
+
+    Extended signature (takes the LIF config of the SN it absorbs); only
+    dispatched via :func:`linear_bn_lif_apply` at trailing-LIF sites.
+    Inputs must be {0,1} spikes — true at every such Conv1DBN site, which
+    all consume LIF outputs. A ragged contraction (% 8 != 0) keeps the
+    single launch on the dense arm, logged, never silent.
+    """
+    x3, shape = fold_time_major(x)
+    packed = x3.shape[-1] % 8 == 0
+    if not packed:
+        runtime_fallback(site, "fused_epilogue",
+                         f"contraction dim {x3.shape[-1]} % 8 != 0 -> "
+                         f"dense arm (still fused)")
+    w = params["linear"]["w"]
+    spikes, bn_s = _neuron_layer_site(x3, w, params["bn"], state["bn"],
+                                      lif_cfg, train, packed,
+                                      policy.interpret)
+    return spikes.reshape(*shape[:-1], w.shape[-1]), {"bn": bn_s}
+
+
 def linear_bn_apply(params: Params, state: State, x: jax.Array, *,
                     train: bool, policy: ExecutionPolicy | None = None,
                     site: str = "linear_bn", backend: str | None = None,
@@ -205,13 +287,64 @@ def linear_bn_apply(params: Params, state: State, x: jax.Array, *,
     Registered implementations: ``"jnp"`` (dense + jnp BN), ``"pallas"``
     (dense + fused BN), ``"pallas+spike_mm"`` (bit-packed spike matmul +
     fused BN). ``backend=``/``spike_mm=``/``interpret=`` are deprecated
-    shims over ``policy``.
+    shims over ``policy``. A ``"fused_epilogue"`` resolution cannot be
+    honoured here — this entry point returns the pre-activation and there
+    is no SN to fuse — so it demotes (logged as the plan predicted) to its
+    pipeline fallback; the fused path lives in
+    :func:`linear_bn_lif_apply`.
     """
     policy = _legacy_policy(policy, backend, spike_mm, interpret,
                             "linear_bn_apply(backend=/spike_mm=/interpret=)")
     impl = policy.resolve(site, "linear_bn")
+    if impl in FUSED_EPILOGUE_IMPLS:
+        fb = fused_epilogue_fallback("linear_bn", impl)
+        runtime_fallback(site, impl, f"no trailing LIF at this site -> {fb}",
+                         expected=True)
+        impl = fb
     return get_kernel("linear_bn", impl)(params, state, x, train, policy,
                                          site)
+
+
+def linear_bn_lif_apply(params: Params, state: State, x: jax.Array,
+                        lif_cfg: LIFConfig, *, train: bool,
+                        policy: ExecutionPolicy | None = None,
+                        site: str = "linear_bn", lif_site: str = "lif",
+                        act_spec: P | None = None):
+    """The Conv1DBN -> SN pair (the model's "neuron layer"): matmul + BN at
+    ``site`` followed by the LIF scan at ``lif_site``.
+
+    When the policy resolves ``site`` to a fused-epilogue implementation,
+    the whole pair runs as ONE Pallas launch (matmul + BN + SOMA megakernel,
+    no HBM pre-activation) and ``lif_site`` never dispatches — 3 launches
+    collapse to 1. Otherwise this is exactly the previous pipeline:
+    ``linear_bn`` dispatch, optional sharding constraint, ``lif_scan``.
+    ``act_spec`` (a PartitionSpec) is applied to the pre-activation on the
+    pipeline path and to the spikes on the fused path — same placement,
+    the tensor it pins just no longer exists in the fused case.
+
+    ``lif_cfg.time_chunk`` note: the fused op runs the full T single-shot
+    — its replay-based backward already stores no per-step residuals, which
+    is the memory profile ``time_chunk`` exists to provide — so outputs and
+    gradients are exactly the single-shot values regardless of the setting
+    (the non-absorbed LIF sites still tile).
+    """
+    policy = policy if policy is not None else ExecutionPolicy()
+    impl = policy.resolve(site, "linear_bn")
+    if impl in FUSED_EPILOGUE_IMPLS and train and \
+            _train_arm_exceeds_vmem(x, params["linear"]["w"].shape[-1],
+                                    x.shape[-1] % 8 == 0, policy, site):
+        impl = fused_epilogue_fallback("linear_bn", impl)
+    if impl in FUSED_EPILOGUE_IMPLS:
+        spikes, st = get_kernel("linear_bn", impl)(params, state, x, lif_cfg,
+                                                   train, policy, site)
+        if act_spec is not None:
+            spikes = shard(spikes, *act_spec)
+        return spikes, st
+    y, st = get_kernel("linear_bn", impl)(params, state, x, train, policy,
+                                          site)
+    if act_spec is not None:
+        y = shard(y, *act_spec)
+    return lif_scan(y, lif_cfg, site=lif_site), st
 
 
 # ---------------------------------------------------------------------------
@@ -331,16 +464,20 @@ def pssa_apply(params: Params, state: State, x: jax.Array, cfg: PSSAConfig,
     """x: (T,B,N,D) real-valued features -> (T,B,N,D); residual added by caller."""
     pol = cfg.policy
     xs = lif_scan(x, cfg.lif_cfg, site="pssa.lif")              # eq. 8  X' = SN(X)
-    q, s_q = linear_bn_apply(params["q"], state["q"], xs, train=train,
-                             policy=pol, site="pssa.qkv")
-    k, s_k = linear_bn_apply(params["k"], state["k"], xs, train=train,
-                             policy=pol, site="pssa.qkv")
-    v, s_v = linear_bn_apply(params["v"], state["v"], xs, train=train,
-                             policy=pol, site="pssa.qkv")
-    q, k, v = (shard(a, *ACT_SPECS["pssa.qkv"]) for a in (q, k, v))
-    qs = lif_scan(q, cfg.lif_cfg, site="pssa.lif")              # eq. 9 (spike Q/K/V)
-    ks = lif_scan(k, cfg.lif_cfg, site="pssa.lif")
-    vs = lif_scan(v, cfg.lif_cfg, site="pssa.lif")
+    # eq. 9: each Conv1DBN -> SN pair is one "neuron layer" — under a
+    # fused-epilogue policy the matmul+BN+SOMA run as a single launch.
+    qs, s_q = linear_bn_lif_apply(params["q"], state["q"], xs, cfg.lif_cfg,
+                                  train=train, policy=pol, site="pssa.qkv",
+                                  lif_site="pssa.lif",
+                                  act_spec=ACT_SPECS["pssa.qkv"])
+    ks, s_k = linear_bn_lif_apply(params["k"], state["k"], xs, cfg.lif_cfg,
+                                  train=train, policy=pol, site="pssa.qkv",
+                                  lif_site="pssa.lif",
+                                  act_spec=ACT_SPECS["pssa.qkv"])
+    vs, s_v = linear_bn_lif_apply(params["v"], state["v"], xs, cfg.lif_cfg,
+                                  train=train, policy=pol, site="pssa.qkv",
+                                  lif_site="pssa.lif",
+                                  act_spec=ACT_SPECS["pssa.qkv"])
 
     qh, kh, vh = (_split_heads(a, cfg.n_heads) for a in (qs, ks, vs))
     if cfg.qk_first:
@@ -392,10 +529,10 @@ def smlp_apply(params: Params, state: State, x: jax.Array, cfg: SMLPConfig,
                *, train: bool):
     pol = cfg.policy
     xs = lif_scan(x, cfg.lif_cfg, site="smlp.lif")   # pre-activation SN
-    h, s_a = linear_bn_apply(params["a"], state["a"], xs, train=train,
-                             policy=pol, site="smlp.a")
-    h = shard(h, *ACT_SPECS["smlp.hidden"])
-    hs = lif_scan(h, cfg.lif_cfg, site="smlp.lif")
+    hs, s_a = linear_bn_lif_apply(params["a"], state["a"], xs, cfg.lif_cfg,
+                                  train=train, policy=pol, site="smlp.a",
+                                  lif_site="smlp.lif",
+                                  act_spec=ACT_SPECS["smlp.hidden"])
     y, s_b = linear_bn_apply(params["b"], state["b"], hs, train=train,
                              policy=pol, site="smlp.b")
     return y, {"a": s_a, "b": s_b}

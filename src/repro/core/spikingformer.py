@@ -24,8 +24,9 @@ from repro.core.policy import (ExecutionPolicy, apply_legacy_exec_flags,
                                register_kernel, runtime_fallback,
                                warn_deprecated_flags)
 from repro.core.spiking_layers import (ACT_SPECS, BlockConfig, _bn_pallas,
-                                       bn_apply, block_apply, init_block,
-                                       init_bn, init_linear, linear_apply)
+                                       _neuron_layer_site, bn_apply,
+                                       block_apply, init_block, init_bn,
+                                       init_linear, linear_apply)
 from repro.models.common import BATCH, MODEL, shard, spec_is_leaf
 
 Params = dict[str, Any]
@@ -152,15 +153,18 @@ class SpikingFormerConfig:
             (f"tokenizer.conv.{i}", "conv", 9 * c_in,
              self.spike_input if i == 0 else True)
             for i, (c_in, _) in enumerate(self.tokenizer_stage_channels()))
+        # 5th spec element: whether a trailing SN follows the matmul at the
+        # site (a fused-epilogue impl can only serve those). Q/K/V and
+        # SMLP-A feed an SN; the Z projection and SMLP-B feed residual adds.
         return conv + (
             ("tokenizer.bn", "bn", None),
         ) + lif("tokenizer.lif") + lif("pssa.lif") + (
-            ("pssa.qkv", "linear_bn", self.d_model),
+            ("pssa.qkv", "linear_bn", self.d_model, True, True),
         ) + attn + (
-            ("pssa.proj", "linear_bn", self.d_model),
+            ("pssa.proj", "linear_bn", self.d_model, True, False),
         ) + lif("smlp.lif") + (
-            ("smlp.a", "linear_bn", self.d_model),
-            ("smlp.b", "linear_bn", self.d_ff),
+            ("smlp.a", "linear_bn", self.d_model, True, True),
+            ("smlp.b", "linear_bn", self.d_ff, True, False),
         )
 
     def execution_plan(self):
@@ -172,21 +176,32 @@ class SpikingFormerConfig:
         Conv->BN->LIF pipeline (RTFormer-style re-parameterization in
         eval, the fused BN kernel in train), so the ``tokenizer.bn`` row
         is annotated: "never dispatched" when every stage is fused,
-        otherwise naming how many stages still dispatch it.
+        otherwise naming how many stages still dispatch it. Stages running
+        the single-launch ``fused_epilogue`` megakernel additionally absorb
+        the SOMA epilogue, so the ``tokenizer.lif`` row is annotated the
+        same way.
         """
         rows = plan_sites(self.policy, self.execution_site_specs())
         conv_rows = [r for r in rows if r.op == "conv"]
-        fused = [r for r in conv_rows if r.effective in FUSED_CONV_IMPLS]
-        if fused:
-            if len(fused) == len(conv_rows):
-                note = ("folded into the fused conv_bn_lif stages "
-                        "(never dispatched)")
+
+        def annotate(site, subset, what):
+            if not subset:
+                return
+            if len(subset) == len(conv_rows):
+                note = f"{what} (never dispatched)"
             else:
-                note = (f"folded at {len(fused)}/{len(conv_rows)} fused "
-                        f"conv_bn_lif stages (still dispatches at the "
-                        f"others)")
-            rows = [dataclasses.replace(r, note=note, expected=True)
-                    if r.site == "tokenizer.bn" else r for r in rows]
+                note = (f"{what} at {len(subset)}/{len(conv_rows)} stages "
+                        f"(still dispatches at the others)")
+            rows[:] = [dataclasses.replace(r, note=note, expected=True)
+                       if r.site == site else r for r in rows]
+
+        annotate("tokenizer.bn",
+                 [r for r in conv_rows if r.effective in FUSED_CONV_IMPLS],
+                 "folded into the fused conv stages")
+        annotate("tokenizer.lif",
+                 [r for r in conv_rows
+                  if r.effective in SINGLE_LAUNCH_CONV_IMPLS],
+                 "absorbed into the single-launch neuron-layer megakernel")
         return rows
 
     def describe_execution(self, mesh=None) -> str:
@@ -355,10 +370,22 @@ def spikingformer_scan_dims(specs):
 # * ``"pallas_packed"`` — same pipeline with the im2col patches bit-packed
 #                         to 1 bit/element through the batched spike-matmul
 #                         kernel (spike inputs only; k*k*c_in % 8 == 0).
+# * ``"fused_epilogue"`` — the whole stage as ONE Pallas launch: the im2col
+#                         matmul (bit-packed on spike inputs), BN (batch
+#                         stats in-kernel in train, RTFormer-folded in
+#                         eval) and the SOMA membrane update run in a
+#                         single kernel — neither ``tokenizer.bn`` nor
+#                         ``tokenizer.lif`` dispatches, and the (T, M, K)
+#                         pre-activation never exists in HBM.
 # ---------------------------------------------------------------------------
 
-#: conv impls that run the fused conv_bn_lif pipeline (BN folded in).
-FUSED_CONV_IMPLS: frozenset[str] = frozenset({"pallas", "pallas_packed"})
+#: conv impls that run a fused Conv->BN->LIF pipeline (BN folded in).
+FUSED_CONV_IMPLS: frozenset[str] = frozenset({"pallas", "pallas_packed",
+                                              "fused_epilogue"})
+
+#: conv impls that additionally absorb the SOMA epilogue into the same
+#: single kernel launch (``tokenizer.lif`` never dispatches).
+SINGLE_LAUNCH_CONV_IMPLS: frozenset[str] = frozenset({"fused_epilogue"})
 
 
 def _conv_init(key, c_in, c_out, dtype):
@@ -386,6 +413,22 @@ def _conv_stage_jnp(params, state, x, lif_cfg, train, spike_in, policy,
     return spikes, {"bn": bn_s}
 
 
+def _im2col_patches(params, x):
+    """Shared prologue of every fused conv arm: lower the k3/s2 stage input
+    (T, B, H, W, C) to time-major im2col patches (T, M, k*k*c_in) with the
+    batch sharding constraint applied, plus the (k*k*c_in, c_out) weight
+    matrix and the output spatial dims."""
+    from repro.kernels import conv_spike
+
+    t, b, h, w, c = x.shape
+    patches = conv_spike.im2col(x.reshape(t * b, h, w, c))
+    _, ho, wo, cdim = patches.shape
+    patches = shard(patches.reshape(t, b * ho * wo, cdim),
+                    None, BATCH, None)                      # (T, M, k*k*c_in)
+    w_mat = conv_spike.conv_w_matrix(params["conv"]["w"])
+    return patches, w_mat, (t, b, ho, wo, cdim)
+
+
 def conv_bn_lif_fused(params, state, x, lif_cfg, train, spike_in, policy,
                       site, *, packed):
     """Fused eq. 4 stage: im2col matmul + folded BN + fused LIF epilogue.
@@ -408,12 +451,7 @@ def conv_bn_lif_fused(params, state, x, lif_cfg, train, spike_in, policy,
     """
     from repro.kernels import conv_spike, ops  # deferred: jnp path stays light
 
-    t, b, h, w, c = x.shape
-    patches = conv_spike.im2col(x.reshape(t * b, h, w, c))
-    tb, ho, wo, cdim = patches.shape
-    patches = shard(patches.reshape(t, b * ho * wo, cdim),
-                    None, BATCH, None)                      # (T, M, k*k*c_in)
-    w_mat = conv_spike.conv_w_matrix(params["conv"]["w"])
+    patches, w_mat, (t, b, ho, wo, cdim) = _im2col_patches(params, x)
     k_out = w_mat.shape[-1]
     use_packed = packed and spike_in and cdim % 8 == 0
     if packed and not use_packed:
@@ -464,6 +502,41 @@ def _conv_stage_packed(params, state, x, lif_cfg, train, spike_in, policy,
     the batched spike-matmul kernel (spike inputs, k*k*c_in % 8 == 0)."""
     return conv_bn_lif_fused(params, state, x, lif_cfg, train, spike_in,
                              policy, site, packed=True)
+
+
+@register_kernel("conv", "fused_epilogue")
+def _conv_stage_megakernel(params, state, x, lif_cfg, train, spike_in,
+                           policy, site):
+    """Single-launch eq. 4 stage: ONE Pallas kernel computes the im2col
+    matmul (bit-packed on spike inputs with ``k*k*c_in % 8 == 0``, dense
+    arm otherwise — logged, never silent), applies BN (batch statistics
+    in-kernel in train, RTFormer-folded weights in eval) and runs the SOMA
+    membrane update with the (U, S) carry in VMEM. Neither ``tokenizer.bn``
+    nor ``tokenizer.lif`` dispatches, and no pre-activation crosses HBM —
+    3 launches -> 1 per stage.
+    """
+    from repro.core.spiking_layers import _train_arm_exceeds_vmem
+
+    patches, w_mat, (t, b, ho, wo, cdim) = _im2col_patches(params, x)
+    packed = spike_in and cdim % 8 == 0
+    if train and _train_arm_exceeds_vmem(patches, w_mat.shape[-1], packed,
+                                         policy, site):
+        # Capacity demotion on a compiling backend: the pipeline arm of the
+        # same fused conv (M-tiled matmul + fused BN + SOMA epilogue).
+        return conv_bn_lif_fused(params, state, x, lif_cfg, train, spike_in,
+                                 policy, site, packed=packed)
+    if not packed:
+        reason = (f"im2col dim {cdim} % 8 != 0" if spike_in
+                  else "float (non-spike) input")
+        # The float first stage is the planned structural decision (INFO);
+        # a ragged contraction is a real constraint violation (WARNING).
+        runtime_fallback(site, "fused_epilogue",
+                         reason + " -> dense arm (still fused)",
+                         expected=not spike_in)
+    spikes, bn_s = _neuron_layer_site(patches, w_mat, params["bn"],
+                                      state["bn"], lif_cfg, train, packed,
+                                      policy.interpret)
+    return spikes.reshape(t, b, ho, wo, w_mat.shape[-1]), {"bn": bn_s}
 
 
 def init_tokenizer(key, cfg: SpikingFormerConfig):

@@ -90,7 +90,7 @@ def fold_bn(w_mat: jax.Array, gamma: jax.Array, beta: jax.Array,
 
 
 def spike_patch_matmul(patches: jax.Array, w: jax.Array, *,
-                       interpret: bool = True) -> jax.Array:
+                       interpret: bool | None = None) -> jax.Array:
     """Bit-packed spike-conv matmul: (T, M, C) {0,1} x (C, K) -> (T, M, K).
 
     Packs the im2col patch rows to 1 bit/element and runs the batched

@@ -16,6 +16,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.backend import resolve_interpret
+
 
 def _bn_fwd_kernel(x_ref, gamma_ref, beta_ref, y_ref, mu_ref, sqrt_ref, *,
                    eps, m_rows):
@@ -53,8 +55,11 @@ def _bn_bwd_kernel(g_ref, x_ref, gamma_ref, mu_ref, sqrt_ref, dx_ref,
 
 @functools.partial(jax.jit, static_argnames=("eps", "block_d", "interpret"))
 def bn_fwd(x: jax.Array, gamma: jax.Array, beta: jax.Array, *,
-           eps: float = 1e-5, block_d: int = 512, interpret: bool = True):
-    """x: (M, D) -> (y (M, D), mu (1, D), sqrt_d (1, D))."""
+           eps: float = 1e-5, block_d: int = 512,
+           interpret: bool | None = None):
+    """x: (M, D) -> (y (M, D), mu (1, D), sqrt_d (1, D)). ``interpret=None``
+    = auto: interpret mode everywhere except a real TPU backend."""
+    interpret = resolve_interpret(interpret)
     m, d = x.shape
     bd = min(block_d, d)
     grid = (pl.cdiv(d, bd),)
@@ -73,8 +78,10 @@ def bn_fwd(x: jax.Array, gamma: jax.Array, beta: jax.Array, *,
 
 @functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
 def bn_bwd(g: jax.Array, x: jax.Array, gamma: jax.Array, mu: jax.Array,
-           sqrt_d: jax.Array, *, block_d: int = 512, interpret: bool = True):
+           sqrt_d: jax.Array, *, block_d: int = 512,
+           interpret: bool | None = None):
     """eq. 19-23: returns (dx (M, D), dgamma (1, D), dbeta (1, D))."""
+    interpret = resolve_interpret(interpret)
     m, d = g.shape
     bd = min(block_d, d)
     grid = (pl.cdiv(d, bd),)

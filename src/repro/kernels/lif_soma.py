@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.backend import resolve_interpret
+
 
 def _lif_fwd_kernel(x_ref, s_ref, u_ref, mask_ref, *, alpha, th_fire, th_lo,
                     th_hi, time_steps):
@@ -73,12 +75,14 @@ def _grid_specs(shape, bm, bd):
 def lif_soma_fwd(x: jax.Array, *, alpha: float = 0.5, th_fire: float = 1.0,
                  th_lo: float = 0.0, th_hi: float = 2.0, block_m: int = 256,
                  block_d: int = 256,
-                 interpret: bool = True):
+                 interpret: bool | None = None):
     """x: (T, M, D) input currents -> (spikes, U_seq, grad_mask), all (T,M,D).
 
     block_m x block_d picked so 4 x T x bm x bd x 4B tiles sit comfortably in
-    the ~16 MB v5e VMEM (defaults: 4*4*256*256*4B = 4 MB).
+    the ~16 MB v5e VMEM (defaults: 4*4*256*256*4B = 4 MB). ``interpret=None``
+    = auto: interpret mode everywhere except a real TPU backend.
     """
+    interpret = resolve_interpret(interpret)
     t, m, d = x.shape
     bm, bd = min(block_m, m), min(block_d, d)
     grid, spec = _grid_specs(x.shape, bm, bd)
@@ -96,13 +100,14 @@ def lif_soma_bwd(g: jax.Array, u_seq: jax.Array, spikes: jax.Array,
                  mask: jax.Array, gu_last: jax.Array | None = None, *,
                  alpha: float = 0.5,
                  grad_scale: float = 1.0, block_m: int = 256,
-                 block_d: int = 256, interpret: bool = True):
+                 block_d: int = 256, interpret: bool | None = None):
     """GRAD: upstream dL/dS (T,M,D) + persisted (U, S, mask) -> dL/dX.
 
     ``gu_last`` (M, D), when given, is the direct cotangent on the final
     membrane potential U_{T-1} — the carry handed back by the next temporal
     tile's backward pass. ``None`` keeps the classic single-shot recursion.
     """
+    interpret = resolve_interpret(interpret)
     t, m, d = g.shape
     bm, bd = min(block_m, m), min(block_d, d)
     grid, spec = _grid_specs(g.shape, bm, bd)

@@ -3,9 +3,10 @@
 ``lif_soma_op`` is a custom-VJP op whose forward is the SOMA Pallas kernel and
 whose backward is the GRAD Pallas kernel — the exact FP/BP pairing of the
 E2ATST reuse framework (Fig. 4). Every wrapper takes ``interpret: bool | None``
-per call: ``None`` resolves via :func:`repro.core.backend.resolve_interpret`
-(interpret mode everywhere except a real TPU), replacing the old module-global
-``INTERPRET`` flag so one process can mix compiled and emulated calls.
+per call and threads it to the kernel entry points *unchanged*: the kernels
+themselves resolve ``None`` via :func:`repro.core.backend.resolve_interpret`
+(interpret mode everywhere except a real TPU), so ``ExecutionPolicy.interpret``
+reaches ``pallas_call`` without any layer in between flattening it to a bool.
 """
 from __future__ import annotations
 
@@ -14,8 +15,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core.backend import resolve_interpret
-from repro.kernels import conv_spike, fused_bn, lif_soma, spike_matmul
+from repro.kernels import conv_spike, fused_bn, lif_soma, neuron_layer, \
+    spike_matmul
 
 
 @partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5, 6))
@@ -26,14 +27,14 @@ def lif_soma_op(x: jax.Array, alpha: float = 0.5, th_fire: float = 1.0,
     """Differentiable fused LIF over (T, M, D); returns spikes."""
     s, _, _ = lif_soma.lif_soma_fwd(x, alpha=alpha, th_fire=th_fire,
                                     th_lo=th_lo, th_hi=th_hi,
-                                    interpret=resolve_interpret(interpret))
+                                    interpret=interpret)
     return s
 
 
 def _lif_fwd(x, alpha, th_fire, th_lo, th_hi, grad_scale, interpret):
     s, u, mask = lif_soma.lif_soma_fwd(x, alpha=alpha, th_fire=th_fire,
                                        th_lo=th_lo, th_hi=th_hi,
-                                       interpret=resolve_interpret(interpret))
+                                       interpret=interpret)
     return s, (u, s, mask)
 
 
@@ -41,7 +42,7 @@ def _lif_bwd(alpha, th_fire, th_lo, th_hi, grad_scale, interpret, res, g):
     u, s, mask = res
     dx = lif_soma.lif_soma_bwd(g, u, s, mask, alpha=alpha,
                                grad_scale=grad_scale,
-                               interpret=resolve_interpret(interpret))
+                               interpret=interpret)
     return (dx,)
 
 
@@ -66,7 +67,7 @@ def lif_soma_carry_op(x: jax.Array, u0: jax.Array, s0: jax.Array,
     x = x.at[0].add(alpha * u0 * (1.0 - s0))
     s, u, _ = lif_soma.lif_soma_fwd(x, alpha=alpha, th_fire=th_fire,
                                     th_lo=th_lo, th_hi=th_hi,
-                                    interpret=resolve_interpret(interpret))
+                                    interpret=interpret)
     return s, u[-1], s[-1]
 
 
@@ -75,7 +76,7 @@ def _lif_carry_fwd(x, u0, s0, alpha, th_fire, th_lo, th_hi, grad_scale,
     x = x.at[0].add(alpha * u0 * (1.0 - s0))
     s, u, mask = lif_soma.lif_soma_fwd(x, alpha=alpha, th_fire=th_fire,
                                        th_lo=th_lo, th_hi=th_hi,
-                                       interpret=resolve_interpret(interpret))
+                                       interpret=interpret)
     return (s, u[-1], s[-1]), (u, s, mask, u0, s0)
 
 
@@ -87,7 +88,7 @@ def _lif_carry_bwd(alpha, th_fire, th_lo, th_hi, grad_scale, interpret, res,
     g_eff = g_s.at[-1].add(g_s_last)
     dx = lif_soma.lif_soma_bwd(g_eff, u, s, mask, g_u_last, alpha=alpha,
                                grad_scale=grad_scale,
-                               interpret=resolve_interpret(interpret))
+                               interpret=interpret)
     # U_1 = alpha * u0 * (1 - s0) + X_1 and dU_1/dX_1 = 1, so dL/dU_1 = dx[0]
     # and the carried-state cotangents follow by the product rule (the reset
     # path stays attached, matching the jnp scan).
@@ -111,13 +112,13 @@ def bn_train_op(x: jax.Array, gamma: jax.Array, beta: jax.Array,
     ``var`` are constants of the VJP (their cotangents are discarded).
     """
     y, mu, sqrt_d = fused_bn.bn_fwd(x, gamma, beta, eps=eps,
-                                    interpret=resolve_interpret(interpret))
+                                    interpret=interpret)
     return y, mu.reshape(-1), jnp.square(sqrt_d).reshape(-1) - eps
 
 
 def _bn_fwd(x, gamma, beta, eps, interpret):
     y, mu, sqrt_d = fused_bn.bn_fwd(x, gamma, beta, eps=eps,
-                                    interpret=resolve_interpret(interpret))
+                                    interpret=interpret)
     out = (y, mu.reshape(-1), jnp.square(sqrt_d).reshape(-1) - eps)
     return out, (x, gamma, mu, sqrt_d)
 
@@ -126,7 +127,7 @@ def _bn_bwd(eps, interpret, res, g):
     x, gamma, mu, sqrt_d = res
     gy = g[0]  # mu/var cotangents: running stats sit outside the loss graph
     dx, dgamma, dbeta = fused_bn.bn_bwd(gy, x, gamma, mu, sqrt_d,
-                                        interpret=resolve_interpret(interpret))
+                                        interpret=interpret)
     return dx, dgamma.reshape(gamma.shape), dbeta.reshape(gamma.shape)
 
 
@@ -145,12 +146,12 @@ def spike_matmul_train_op(spikes: jax.Array, w: jax.Array,
     of 8 (packing granularity).
     """
     return spike_matmul.spike_matmul(spikes, w,
-                                     interpret=resolve_interpret(interpret))
+                                     interpret=interpret)
 
 
 def _smm_fwd(spikes, w, interpret):
     out = spike_matmul.spike_matmul(spikes, w,
-                                    interpret=resolve_interpret(interpret))
+                                    interpret=interpret)
     return out, (spikes, w)
 
 
@@ -177,12 +178,12 @@ def spike_bmm_train_op(spikes: jax.Array, w: jax.Array,
     attention path exactly. C must be a multiple of 8.
     """
     return spike_matmul.spike_matmul_batched(
-        spikes, w, interpret=resolve_interpret(interpret))
+        spikes, w, interpret=interpret)
 
 
 def _sbmm_fwd(spikes, w, interpret):
     out = spike_matmul.spike_matmul_batched(
-        spikes, w, interpret=resolve_interpret(interpret))
+        spikes, w, interpret=interpret)
     return out, (spikes, w)
 
 
@@ -214,12 +215,12 @@ def spike_patch_mm_train_op(patches: jax.Array, w: jax.Array,
     of 8.
     """
     return conv_spike.spike_patch_matmul(
-        patches, w, interpret=resolve_interpret(interpret))
+        patches, w, interpret=interpret)
 
 
 def _spmm_fwd(patches, w, interpret):
     out = conv_spike.spike_patch_matmul(
-        patches, w, interpret=resolve_interpret(interpret))
+        patches, w, interpret=interpret)
     return out, (patches, w)
 
 
@@ -240,10 +241,138 @@ def spike_matmul_op(spikes: jax.Array, w: jax.Array,
     """Bit-packed spike matmul (forward-only fast path for serving; for
     training use ``spike_matmul_train_op``, which adds the dense VJP)."""
     return spike_matmul.spike_matmul(spikes, w,
-                                     interpret=resolve_interpret(interpret))
+                                     interpret=interpret)
 
 
 def spike_matmul_packed_op(packed: jax.Array, w: jax.Array,
                            interpret: bool | None = None) -> jax.Array:
     return spike_matmul.spike_matmul_packed(
-        packed, w, interpret=resolve_interpret(interpret))
+        packed, w, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Single-launch neuron layer (matmul + BN + SOMA megakernel)
+# ---------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8, 9, 10, 11))
+def neuron_layer_train_op(x: jax.Array, w: jax.Array, gamma: jax.Array,
+                          beta: jax.Array, alpha: float = 0.5,
+                          th_fire: float = 1.0, th_lo: float = 0.0,
+                          th_hi: float = 2.0, grad_scale: float = 1.0,
+                          eps: float = 1e-5, packed: bool = False,
+                          interpret: bool | None = None):
+    """Differentiable single-launch neuron layer, train mode:
+    ``x (T, M, C) @ w (C, K)`` -> BatchNorm (batch statistics over T*M,
+    computed in-kernel) -> SOMA (eq. 11), all in ONE Pallas kernel with no
+    HBM-materialized pre-activation. Returns ``(spikes, mu, var)`` — the
+    fp32 batch statistics (shape (K,)) feed the caller's running-stat blend
+    exactly like :func:`bn_train_op`; only ``spikes`` carries gradients.
+
+    ``packed=True`` bit-packs the {0,1} input along C (1 bit/element across
+    HBM; C % 8 == 0 required) — the megakernel twin of
+    ``spike_matmul_train_op``.
+
+    The backward pass stores NO per-step residuals: it *replays* the
+    recomputed pre-activation through the existing SOMA/GRAD kernel pair
+    (eq. 12) and the fused BN backward (eq. 19-23), then closes with the
+    dense matmul VJP — so the op has the temporal-blocking memory profile
+    (``time_chunk``-style) built in, with exact gradients.
+
+    Replay caveat: the forward kernel and the backward's dense einsum both
+    accumulate in fp32 but in different reduction orders, so a membrane
+    value within ~1 ulp of a threshold can fire differently in the replay
+    than in the emitted spikes — the gradient is then the exact gradient
+    of the *replayed* trajectory. Measure-zero on continuous inputs and
+    bounded by the surrogate window; persisting (U, S, mask) instead (the
+    ASIC's choice) would cost the 3x(T, M, K) HBM traffic this op exists
+    to remove. Revisit after the real-TPU soak if parity drifts.
+    """
+    s, mu, var = neuron_layer.neuron_layer_train(
+        x, w, gamma, beta, alpha=alpha, th_fire=th_fire, eps=eps,
+        packed=packed, interpret=interpret)
+    return s, mu.reshape(-1), var.reshape(-1)
+
+
+def _nl_train_fwd(x, w, gamma, beta, alpha, th_fire, th_lo, th_hi,
+                  grad_scale, eps, packed, interpret):
+    s, mu, var = neuron_layer.neuron_layer_train(
+        x, w, gamma, beta, alpha=alpha, th_fire=th_fire, eps=eps,
+        packed=packed, interpret=interpret)
+    sqrt_d = jnp.sqrt(var + eps)
+    return (s, mu.reshape(-1), var.reshape(-1)), (x, w, gamma, beta, mu,
+                                                  sqrt_d)
+
+
+def _nl_train_bwd(alpha, th_fire, th_lo, th_hi, grad_scale, eps, packed,
+                  interpret, res, g):
+    x, w, gamma, beta, mu, sqrt_d = res
+    g_s = g[0]   # mu/var cotangents: running stats sit outside the loss graph
+    # Replay: recompute the pre-activation (dense matmul + saved-stat BN) and
+    # run it through the SOMA kernel to regenerate the (U, S, mask) signals
+    # the GRAD unit consumes — nothing per-step was stored during FP.
+    z = jnp.einsum("tmc,ck->tmk", x.astype(jnp.float32),
+                   w.astype(jnp.float32))
+    y = (gamma.astype(jnp.float32) * (z - mu) / sqrt_d
+         + beta.astype(jnp.float32))
+    s, u, mask = lif_soma.lif_soma_fwd(y, alpha=alpha, th_fire=th_fire,
+                                       th_lo=th_lo, th_hi=th_hi,
+                                       interpret=interpret)
+    dy = lif_soma.lif_soma_bwd(g_s.astype(y.dtype), u, s, mask, alpha=alpha,
+                               grad_scale=grad_scale, interpret=interpret)
+    t, m, k = z.shape
+    dz, dgamma, dbeta = fused_bn.bn_bwd(
+        dy.reshape(t * m, k), z.reshape(t * m, k), gamma, mu, sqrt_d,
+        interpret=interpret)
+    dz = dz.reshape(t, m, k)
+    dx = jnp.einsum("tmk,ck->tmc", dz, w.astype(dz.dtype)).astype(x.dtype)
+    dw = jnp.einsum("tmc,tmk->ck", x.astype(dz.dtype), dz).astype(w.dtype)
+    return (dx, dw, dgamma.reshape(gamma.shape).astype(gamma.dtype),
+            dbeta.reshape(beta.shape).astype(beta.dtype))
+
+
+neuron_layer_train_op.defvjp(_nl_train_fwd, _nl_train_bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9))
+def neuron_layer_eval_op(x: jax.Array, w: jax.Array, bias: jax.Array,
+                         alpha: float = 0.5, th_fire: float = 1.0,
+                         th_lo: float = 0.0, th_hi: float = 2.0,
+                         grad_scale: float = 1.0, packed: bool = False,
+                         interpret: bool | None = None) -> jax.Array:
+    """Differentiable single-launch neuron layer, eval mode: BN already
+    folded into ``(w, bias)`` (RTFormer re-param, exact for fixed running
+    statistics), so the kernel is matmul + bias + SOMA. Returns spikes
+    (T, M, K). The backward replays the recomputed pre-activation through
+    the GRAD kernel, like the train op (gradients flow to x, w and bias;
+    BN-parameter gradients flow through the caller's differentiable fold).
+    """
+    return neuron_layer.neuron_layer_eval(
+        x, w, bias, alpha=alpha, th_fire=th_fire, packed=packed,
+        interpret=interpret)
+
+
+def _nl_eval_fwd(x, w, bias, alpha, th_fire, th_lo, th_hi, grad_scale,
+                 packed, interpret):
+    s = neuron_layer.neuron_layer_eval(
+        x, w, bias, alpha=alpha, th_fire=th_fire, packed=packed,
+        interpret=interpret)
+    return s, (x, w, bias)
+
+
+def _nl_eval_bwd(alpha, th_fire, th_lo, th_hi, grad_scale, packed, interpret,
+                 res, g):
+    x, w, bias = res
+    y = jnp.einsum("tmc,ck->tmk", x.astype(jnp.float32),
+                   w.astype(jnp.float32)) + bias.astype(jnp.float32)
+    s, u, mask = lif_soma.lif_soma_fwd(y, alpha=alpha, th_fire=th_fire,
+                                       th_lo=th_lo, th_hi=th_hi,
+                                       interpret=interpret)
+    dy = lif_soma.lif_soma_bwd(g.astype(y.dtype), u, s, mask, alpha=alpha,
+                               grad_scale=grad_scale, interpret=interpret)
+    dx = jnp.einsum("tmk,ck->tmc", dy, w.astype(dy.dtype)).astype(x.dtype)
+    dw = jnp.einsum("tmc,tmk->ck", x.astype(dy.dtype), dy).astype(w.dtype)
+    dbias = jnp.sum(dy, axis=(0, 1)).reshape(bias.shape).astype(bias.dtype)
+    return dx, dw, dbias
+
+
+neuron_layer_eval_op.defvjp(_nl_eval_fwd, _nl_eval_bwd)

@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.backend import resolve_interpret
+
 
 def spike_pack(spikes: jax.Array) -> jax.Array:
     """(..., C) {0,1} -> (..., C//8) uint8, LSB-first along C."""
@@ -56,11 +58,14 @@ def _spike_mm_kernel(sp_ref, w_ref, o_ref, acc_ref, *, n_cb):
     "block_m", "block_k", "block_c", "out_dtype", "interpret"))
 def spike_matmul_packed(packed: jax.Array, w: jax.Array, *, block_m: int = 256,
                         block_k: int = 256, block_c: int = 512,
-                        out_dtype=None, interpret: bool = True) -> jax.Array:
+                        out_dtype=None,
+                        interpret: bool | None = None) -> jax.Array:
     """packed: (M, C//8) uint8; w: (C, K) -> (M, K).
 
     MXU-aligned blocks (multiples of 128); the fp32 accumulator tile lives in
-    a VMEM scratch buffer revisited across the C grid axis.
+    a VMEM scratch buffer revisited across the C grid axis. ``interpret``
+    defaults to ``None`` = auto (interpret mode everywhere except a real TPU
+    backend); pass an explicit bool to force either mode.
     """
     m, c8 = packed.shape
     c, k = w.shape
@@ -80,7 +85,7 @@ def spike_matmul_packed(packed: jax.Array, w: jax.Array, *, block_m: int = 256,
         out_specs=pl.BlockSpec((bm, bk), lambda i, j, cb: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, k), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bk), jnp.float32)],
-        interpret=interpret)(packed, w)
+        interpret=resolve_interpret(interpret))(packed, w)
 
 
 def spike_matmul(spikes: jax.Array, w: jax.Array, **kw) -> jax.Array:
@@ -115,7 +120,7 @@ def _spike_bmm_kernel(sp_ref, w_ref, o_ref, acc_ref, *, n_cb):
 def spike_matmul_packed_batched(packed: jax.Array, w: jax.Array, *,
                                 block_m: int = 256, block_k: int = 256,
                                 block_c: int = 512, out_dtype=None,
-                                interpret: bool = True) -> jax.Array:
+                                interpret: bool | None = None) -> jax.Array:
     """packed: (G, M, C//8) uint8; w: (G, C, K) -> (G, M, K).
 
     Same accumulator scheme as :func:`spike_matmul_packed` with one grid axis
@@ -141,7 +146,7 @@ def spike_matmul_packed_batched(packed: jax.Array, w: jax.Array, *,
         out_specs=pl.BlockSpec((1, bm, bk), lambda gi, i, j, cb: (gi, i, j)),
         out_shape=jax.ShapeDtypeStruct((g, m, k), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bk), jnp.float32)],
-        interpret=interpret)(packed, w)
+        interpret=resolve_interpret(interpret))(packed, w)
 
 
 def spike_matmul_batched(spikes: jax.Array, w: jax.Array, **kw) -> jax.Array:

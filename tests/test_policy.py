@@ -138,8 +138,11 @@ def test_with_backend_shim_equals_with_policy_and_warns():
     cfg = SpikingFormerConfig(num_layers=1, d_model=16, n_heads=2, d_ff=32,
                               time_steps=1, image_size=8, patch_grid=4,
                               num_classes=2)
-    with pytest.warns(DeprecationWarning):
+    with pytest.warns(DeprecationWarning) as rec:
         legacy = cfg.with_backend("pallas", spike_mm=True, interpret=True)
+    # the warning must point at *this* file (the user's call site), not a
+    # repro internal — the stacklevel contract of warn_deprecated_flags
+    assert rec[0].filename == __file__
     new = cfg.with_policy(ExecutionPolicy(
         backend="pallas", interpret=True,
         overrides={"linear_bn": "pallas+spike_mm"}))
@@ -148,12 +151,16 @@ def test_with_backend_shim_equals_with_policy_and_warns():
 
 
 def test_ctor_kwarg_shims_warn_and_fold_into_policy():
-    with pytest.warns(DeprecationWarning):
+    with pytest.warns(DeprecationWarning) as rec:
         lif = LIFConfig(backend="pallas")
+    # reached through dataclass __init__ -> __post_init__ ->
+    # apply_legacy_exec_flags: the stacklevel must still climb to user code
+    assert rec[0].filename == __file__
     assert lif == LIFConfig(policy=ExecutionPolicy(backend="pallas"))
-    with pytest.warns(DeprecationWarning):
+    with pytest.warns(DeprecationWarning) as rec:
         blk = BlockConfig(d_model=16, n_heads=2, d_ff=32, backend="pallas",
                           spike_mm=True)
+    assert rec[0].filename == __file__
     assert blk.policy == policy_from_flags("pallas", True)
     assert blk.pssa.policy == blk.policy       # derived configs inherit
     assert blk.smlp.policy == blk.policy
@@ -177,12 +184,28 @@ def test_with_backend_jnp_drops_pallas_overrides():
 
 
 def test_get_config_legacy_kwargs_warn():
-    with pytest.warns(DeprecationWarning):
+    with pytest.warns(DeprecationWarning) as rec:
         cfg = get_spikingformer_config("spikingformer-smoke",
                                        backend="pallas", spike_mm=True)
+    # the two-frame configs/spikingformer.py path must attribute the
+    # warning to this file, not to repro internals
+    assert rec[0].filename == __file__
     want = get_spikingformer_config(
         "spikingformer-smoke", policy=policy_from_flags("pallas", True))
     assert cfg == want
+
+
+def test_per_call_shim_warns_at_user_site():
+    """The bn_apply/linear_bn_apply legacy kwargs go through _legacy_policy
+    (one extra frame): the warning still lands on user code."""
+    from repro.core.spiking_layers import init_bn, bn_apply
+
+    params, state = init_bn(8)
+    x = jax.random.normal(KEY, (4, 8))
+    with pytest.warns(DeprecationWarning) as rec:
+        bn_apply(params, state, x, train=True, backend="pallas",
+                 interpret=True)
+    assert rec[0].filename == __file__
 
 
 def test_preset_at_suffix_accepts_policy_names():
@@ -213,34 +236,43 @@ def test_env_repro_backend_selects_policy(monkeypatch):
 # ---------------------------------------------------------------------------
 
 def test_plan_resolves_packing_fallback_once():
-    """A site whose contraction dim is not a multiple of 8 is resolved to
-    its dense fallback at *plan* time, with a reported note."""
+    """A site whose contraction dim is not a multiple of 8 is resolved at
+    *plan* time, with a reported note: pipeline (multi-launch) impls demote
+    to their dense fallback; the single-launch fused_epilogue megakernel
+    keeps the launch and only loses the packed arm."""
     cfg = SpikingFormerConfig(num_layers=1, d_model=36, n_heads=2, d_ff=20,
                               time_steps=1, image_size=16, patch_grid=4,
                               num_classes=2,
                               policy=named_policy("pallas-full"))
     rows = {r.site: r for r in cfg.execution_plan()}
     qkv = rows["pssa.qkv"]                       # packs d_model = 36
-    assert qkv.requested == "pallas+spike_mm"
-    assert qkv.effective == "pallas"
-    assert "% 8" in qkv.note
+    assert qkv.requested == "fused_epilogue"
+    assert qkv.effective == "fused_epilogue"     # still one launch...
+    assert "% 8" in qkv.note and "dense arm" in qkv.note
+    assert not qkv.expected                      # ...but warns: packing lost
     qk = rows["attn_qk"]                         # packs head_dim = 18
     assert qk.requested == "pallas_packed" and qk.effective == "jnp"
     av = rows["attn_av"]                         # packs num_tokens = 16: OK
     assert av.effective == "pallas_packed" and av.note == ""
-    assert rows["smlp.b"].effective == "pallas"  # packs d_ff = 20
-    # Per-stage tokenizer conv decisions: stage 1 demotes for its float
-    # input (structural, expected); stage 2 packs 9*18 = 162 — a ragged
-    # contraction, a real (unexpected) constraint violation.
+    # smlp.b: no trailing LIF (structural) -> pallas+spike_mm, then the
+    # ragged d_ff = 20 demotes that to dense pallas (violation).
+    b = rows["smlp.b"]
+    assert b.requested == "fused_epilogue" and b.effective == "pallas"
+    assert "no trailing LIF" in b.note and "% 8" in b.note
+    assert not b.expected
+    # Per-stage tokenizer conv decisions: stage 1 runs the dense arm for
+    # its float input (structural, expected); stage 2 packs 9*18 = 162 — a
+    # ragged contraction, a real (unexpected) constraint violation. Both
+    # keep the single-launch megakernel.
     c0, c1 = rows["tokenizer.conv.0"], rows["tokenizer.conv.1"]
-    assert c0.requested == "pallas_packed" and c0.effective == "pallas"
+    assert c0.requested == "fused_epilogue" == c0.effective
     assert "non-spike" in c0.note and c0.expected
-    assert c1.requested == "pallas_packed" and c1.effective == "pallas"
+    assert c1.requested == "fused_epilogue" == c1.effective
     assert "% 8" in c1.note and not c1.expected
 
     table = cfg.describe_execution()
     assert "pssa.qkv" in table and "attn_qk" in table
-    assert "pallas+spike_mm" in table and "tokenizer.conv.1" in table
+    assert "fused_epilogue" in table and "tokenizer.conv.1" in table
 
 
 def test_plan_rejects_unregistered_impl():
@@ -274,28 +306,36 @@ def test_plan_excludes_attn_sites_when_kv_first():
 
 
 def test_aligned_plan_has_no_fallbacks():
-    """Well-shaped config: no *unexpected* fallback anywhere. The two
-    expected structural notes are the float-image first tokenizer stage
-    (demotes to the dense im2col arm of the fused pipeline) and the
-    tokenizer.bn fold annotation."""
+    """Well-shaped config: no *unexpected* fallback anywhere. The expected
+    structural notes are the float-image first tokenizer stage (dense arm
+    of the same single-launch megakernel), the no-trailing-LIF linear_bn
+    sites (pipeline fallback), and the tokenizer.bn/lif fold annotations."""
     cfg = get_spikingformer_config("spikingformer-smoke@pallas-full")
     rows = {r.site: r for r in cfg.execution_plan()}
     assert all(r.note == "" or r.expected for r in rows.values())
-    assert rows["tokenizer.conv.0"].effective == "pallas"     # float images
+    assert rows["tokenizer.conv.0"].effective == "fused_epilogue"
+    assert "dense arm" in rows["tokenizer.conv.0"].note    # float images
     assert rows["tokenizer.conv.0"].expected
-    assert rows["tokenizer.conv.1"].effective == "pallas_packed"
+    assert rows["tokenizer.conv.1"].effective == "fused_epilogue"
     assert rows["tokenizer.conv.1"].note == ""
+    assert rows["pssa.qkv"].effective == "fused_epilogue"
+    assert rows["smlp.a"].effective == "fused_epilogue"
+    for site in ("pssa.proj", "smlp.b"):       # feed residual adds, no SN
+        assert rows[site].effective == "pallas+spike_mm"
+        assert "no trailing LIF" in rows[site].note and rows[site].expected
     assert "folded" in rows["tokenizer.bn"].note
+    assert "absorbed" in rows["tokenizer.lif"].note
 
 
 def test_spike_input_first_stage_packs():
     """Pre-encoded spike frames (DVS-style) with c_in % 8 == 0 let stage 1
-    ride the packed conv too — no demotion note anywhere in the tokenizer."""
+    ride the packed megakernel arm too — no note anywhere in the
+    tokenizer."""
     import dataclasses as dc
     cfg = dc.replace(get_spikingformer_config(
         "spikingformer-smoke@pallas-full"), in_channels=8, spike_input=True)
     rows = {r.site: r for r in cfg.execution_plan() if r.op == "conv"}
-    assert all(r.effective == "pallas_packed" and r.note == ""
+    assert all(r.effective == "fused_epilogue" and r.note == ""
                for r in rows.values())
 
 

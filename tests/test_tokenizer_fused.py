@@ -178,15 +178,17 @@ def test_tokenizer_time_chunk_exact_through_fused_path():
 
 def test_ragged_stage_demotes_with_warning(caplog):
     """A spike-fed stage whose k*k*c_in is not a multiple of 8 runs the
-    dense im2col arm — numerically identical, and the demotion is logged as
-    a WARNING (constraint violation), unlike the INFO-only float stage 1."""
+    dense arm (of the same single-launch megakernel) — numerically
+    identical, and the lost packing is logged as a WARNING (constraint
+    violation), unlike the INFO-only float stage 1."""
     from repro.core import policy as policy_mod
 
     # d_model=36 -> stage 2 consumes 18 channels: 9*18 = 162, 162 % 8 != 0.
     cfg_j = dataclasses.replace(TOK_CFG, d_model=36, n_heads=2)
     cfg_p = cfg_j.with_policy(named_policy("pallas-full"))
     rows = {r.site: r for r in cfg_p.execution_plan() if r.op == "conv"}
-    assert rows["tokenizer.conv.1"].effective == "pallas"
+    assert rows["tokenizer.conv.1"].effective == "fused_epilogue"
+    assert "dense arm" in rows["tokenizer.conv.1"].note
     assert not rows["tokenizer.conv.1"].expected
 
     params, state = init_tokenizer(KEY, cfg_j)
