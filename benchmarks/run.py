@@ -6,6 +6,7 @@ Prints ``name,value,...`` CSV blocks:
   fig11    - OS_C per-operator energy breakdown          (Fig. 11)
   table9   - headline metrics vs paper + SOTA            (Table IX)
   kernels  - Pallas kernel micro-benches                 (interpret mode)
+  serving  - continuous-batching Poisson-trace replay    (docs/SERVING.md)
 
 ``--smoke`` (used by CI) shrinks the kernel shapes and rep counts so the
 whole sweep finishes in well under a minute on a laptop-class CPU.
@@ -84,13 +85,14 @@ def main() -> None:
 
     from benchmarks import (bench_comparison, bench_dataflows,
                             bench_energy_breakdown, bench_kernels,
-                            bench_model_table)
+                            bench_model_table, bench_serving)
     sections = [
         ("table1", lambda: bench_model_table.run(smoke=args.smoke)),
         ("fig9_10", bench_dataflows.run),
         ("fig11", bench_energy_breakdown.run),
         ("table9", bench_comparison.run),
         ("kernels", lambda: bench_kernels.run(smoke=args.smoke)),
+        ("serving", lambda: bench_serving.run(smoke=args.smoke)),
     ]
     report = {"smoke": args.smoke, "generated_unix": int(time.time()),
               "sections": {}}

@@ -1,8 +1,10 @@
-"""Serve a small LM with batched requests through the wave engine.
+"""Serve a small LM through the continuous-batching engine.
 
 Trains a reduced qwen3 on the synthetic bigram stream first (so generation
 is non-trivial: the model learns the transition table), then serves a batch
-of prompts and reports whether generated continuations follow the table.
+of prompts — requests flow through a persistent slot cache, admitted and
+retired independently (docs/SERVING.md) — and reports whether generated
+continuations follow the table.
 
 Run:  PYTHONPATH=src python examples/serve_lm.py [--train-steps 150]
 """

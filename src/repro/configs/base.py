@@ -12,6 +12,7 @@ from typing import Any
 
 import jax.numpy as jnp
 
+from repro.core.lif import LIFConfig
 from repro.models.attention import AttnConfig
 from repro.models.mla import MLAConfig
 from repro.models.moe import MoEConfig
@@ -40,6 +41,13 @@ class ArchConfig:
     ssm: SSMConfig | None = None
     rwkv: RWKVConfig | None = None
     hybrid_attn_every: int = 0        # zamba2: shared attn block period
+    # Spiking-LM: a stateful LIF neuron (E2ATST eq. 11) on every block's
+    # FFN/channel/mixer branch, with the sequence axis as the neuron's time
+    # axis. Training/prefill run the sequence-as-time LIF scan; decode
+    # carries the per-layer (U, S) membrane state in the serving cache (the
+    # KV-cache analogue for neurons) and advances it one SOMA step per
+    # token. None = dense (non-spiking) LM, the default.
+    lif: LIFConfig | None = None
     encoder_layers: int = 0           # whisper
     encoder_seq: int = 1500
     vlm_stub: bool = False            # pixtral: patch embeddings merged in

@@ -267,6 +267,33 @@ def lif_scan_with_state(x_seq: jax.Array, u0: jax.Array, s0: jax.Array,
     return _lif_state_kernel(impl, site)(x_seq, u0, s0, cfg, site)
 
 
+def lif_decode_step(x: jax.Array, u0: jax.Array, s0: jax.Array,
+                    cfg: LIFConfig, site: str = "lif"):
+    """Single-token serving step: one eq. 11 SOMA update from carried (U, S).
+
+    The T=1 twin of :func:`lif_scan_with_state`, used by the LM decode path:
+    ``x`` is this step's membrane input (any shape), ``u0``/``s0`` the state
+    persisted in the serving engine's slot cache. Returns
+    ``(spikes, (u_next, s_next))``. Dispatch follows the site's ``lif_state``
+    resolution: a ``"pallas"``-backed policy reuses the fused carry kernel
+    (:func:`repro.kernels.ops.lif_soma_step_op`); anything else runs the
+    pure :func:`lif_step`. Step-by-step application is exactly the stateful
+    scan, so decode matches the full-sequence forward token for token.
+    """
+    impl = cfg.policy.resolve(site, "lif_state")
+    if impl == "pallas" and x.ndim >= 2:
+        from repro.kernels import ops
+        x2 = x.reshape(-1, x.shape[-1])
+        s, u_next, s_next = ops.lif_soma_step_op(
+            x2, u0.reshape(x2.shape), s0.reshape(x2.shape),
+            cfg.alpha, cfg.th_fire, cfg.th_lo, cfg.th_hi, cfg.grad_scale,
+            cfg.policy.interpret)
+        return s.reshape(x.shape), (u_next.reshape(x.shape),
+                                    s_next.reshape(x.shape))
+    u, s = lif_step(u0, s0, x, cfg)
+    return s, (u, s)
+
+
 def lif_reference_manual_grad(x_seq: jax.Array, g_seq: jax.Array,
                               cfg: LIFConfig) -> jax.Array:
     """Hand-rolled eq. 12 BPTT for testing: given upstream dL/dS_t (g_seq),

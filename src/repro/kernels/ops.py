@@ -100,6 +100,25 @@ def _lif_carry_bwd(alpha, th_fire, th_lo, th_hi, grad_scale, interpret, res,
 lif_soma_carry_op.defvjp(_lif_carry_fwd, _lif_carry_bwd)
 
 
+def lif_soma_step_op(x: jax.Array, u0: jax.Array, s0: jax.Array,
+                     alpha: float = 0.5, th_fire: float = 1.0,
+                     th_lo: float = 0.0, th_hi: float = 2.0,
+                     grad_scale: float = 1.0,
+                     interpret: bool | None = None):
+    """Single-token serving step of the stateful fused SOMA.
+
+    The T=1 specialization of :func:`lif_soma_carry_op` — the same
+    custom-VJP carry kernel that powers temporal tiling and streaming — so
+    the serving engine's per-token decode and training's chunked scan share
+    one code path (and one set of kernels). ``x``/``u0``/``s0`` are (M, D);
+    returns ``(spikes, u_next, s_next)``, each (M, D), where the state pair
+    is what the engine's slot cache persists between decode steps.
+    """
+    s, u_next, s_next = lif_soma_carry_op(
+        x[None], u0, s0, alpha, th_fire, th_lo, th_hi, grad_scale, interpret)
+    return s[0], u_next, s_next
+
+
 @partial(jax.custom_vjp, nondiff_argnums=(3, 4))
 def bn_train_op(x: jax.Array, gamma: jax.Array, beta: jax.Array,
                 eps: float = 1e-5, interpret: bool | None = None):

@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.core.lif import lif_decode_step, lif_scan
 from repro.models import attention as attn_mod
 from repro.models import mla as mla_mod
 from repro.models import moe as moe_mod
@@ -35,6 +36,36 @@ from repro.models.common import (BATCH, cross_entropy_loss, embed, lscan,
 from repro.models.mlp import init_swiglu, swiglu
 
 Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Spiking-LM branch neuron (cfg.lif): sequence-as-time stateful LIF
+# ---------------------------------------------------------------------------
+
+#: Registry site of the per-block branch neuron (per-site policy overrides).
+LM_LIF_SITE = "lm.ffn.lif"
+
+
+def _seq_lif(f: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """LIF over a (B, S, D) branch output with the *sequence* axis as the
+    neuron's time axis (eq. 11, starting from rest). Token-by-token decode
+    (:func:`repro.core.lif.lif_decode_step` fed the cached (U, S)) continues
+    this exact recursion, so forward and decode agree token for token."""
+    spikes = lif_scan(jnp.swapaxes(f, 0, 1), cfg.lif, site=LM_LIF_SITE)
+    return jnp.swapaxes(spikes, 0, 1)
+
+
+def _lif_decode(f: jax.Array, st: dict[str, jax.Array], cfg: ArchConfig):
+    """One SOMA step on a (B, 1, D) decode branch output; ``st`` is the
+    slot-batched {"u","s"} membrane state from the serving cache."""
+    spike, (u, s) = lif_decode_step(f[:, 0], st["u"], st["s"], cfg.lif,
+                                    site=LM_LIF_SITE)
+    return spike[:, None], {"u": u, "s": s}
+
+
+def _init_lif_state(batch: int, cfg: ArchConfig, dtype):
+    return {"u": jnp.zeros((batch, cfg.d_model), dtype),
+            "s": jnp.zeros((batch, cfg.d_model), dtype)}
 
 
 # ---------------------------------------------------------------------------
@@ -72,23 +103,28 @@ def _dense_block(p, x, cfg: ArchConfig, *, use_flash: bool):
         f, aux = moe_mod.moe_apply(p["ffn"], h, cfg.moe)
     else:
         f = swiglu(p["ffn"], h)
+    if cfg.lif is not None:
+        f = _seq_lif(f, cfg)
     return x + f, aux
 
 
 def _dense_block_decode(p, x, cache, pos, cfg: ArchConfig):
+    kv = cache["kv"] if cfg.lif is not None else cache
     h = rmsnorm(p["ln1"], x, cfg.norm_eps)
     if cfg.mla is not None:
-        a, cache = mla_mod.mla_decode(p["attn"], h, cache, pos, cfg.mla)
+        a, kv = mla_mod.mla_decode(p["attn"], h, kv, pos, cfg.mla)
     else:
-        a, cache = attn_mod.attention_decode(p["attn"], h, cache, pos,
-                                             cfg.attn)
+        a, kv = attn_mod.attention_decode(p["attn"], h, kv, pos, cfg.attn)
     x = x + a
     h = rmsnorm(p["ln2"], x, cfg.norm_eps)
     if cfg.moe is not None:
         f, _ = moe_mod.moe_apply(p["ffn"], h, cfg.moe)
     else:
         f = swiglu(p["ffn"], h)
-    return x + f, cache
+    if cfg.lif is not None:
+        f, lif_st = _lif_decode(f, cache["lif"], cfg)
+        return x + f, {"kv": kv, "lif": lif_st}
+    return x + f, kv
 
 
 def _init_rwkv_block(key, cfg: ArchConfig):
@@ -103,10 +139,12 @@ def _rwkv_block(p, x, cfg: ArchConfig):
     x = x + rwkv_mod.rwkv_time_mix(p["time"],
                                    rmsnorm(p["ln1"], x, cfg.norm_eps),
                                    cfg.rwkv)
-    x = x + rwkv_mod.rwkv_channel_mix(p["chan"],
+    c_out = rwkv_mod.rwkv_channel_mix(p["chan"],
                                       rmsnorm(p["ln2"], x, cfg.norm_eps),
                                       cfg.rwkv)
-    return x
+    if cfg.lif is not None:
+        c_out = _seq_lif(c_out, cfg)
+    return x + c_out
 
 
 def _rwkv_block_decode(p, x, state, cfg: ArchConfig):
@@ -117,8 +155,10 @@ def _rwkv_block_decode(p, x, state, cfg: ArchConfig):
     h = rmsnorm(p["ln2"], x, cfg.norm_eps)
     c_out = rwkv_mod.rwkv_channel_mix(p["chan"], h, cfg.rwkv,
                                       x_prev=state["chan"])
-    x = x + c_out
-    return x, {"time": t_state, "chan": h}
+    new_state = {"time": t_state, "chan": h}
+    if cfg.lif is not None:
+        c_out, new_state["lif"] = _lif_decode(c_out, state["lif"], cfg)
+    return x + c_out, new_state
 
 
 def _init_mamba_block(key, cfg: ArchConfig):
@@ -127,15 +167,23 @@ def _init_mamba_block(key, cfg: ArchConfig):
 
 
 def _mamba_block(p, x, cfg: ArchConfig):
-    return x + ssm_mod.ssm_mixer(p["ssm"], rmsnorm(p["ln"], x, cfg.norm_eps),
-                                 cfg.ssm)
+    out = ssm_mod.ssm_mixer(p["ssm"], rmsnorm(p["ln"], x, cfg.norm_eps),
+                            cfg.ssm)
+    if cfg.lif is not None:
+        out = _seq_lif(out, cfg)
+    return x + out
 
 
 def _mamba_block_decode(p, x, state, cfg: ArchConfig):
-    out, state = ssm_mod.ssm_decode(p["ssm"],
-                                    rmsnorm(p["ln"], x, cfg.norm_eps),
-                                    state, cfg.ssm)
-    return x + out, state
+    ssm_state = {k: state[k] for k in ("h", "conv")} \
+        if cfg.lif is not None else state
+    out, ssm_state = ssm_mod.ssm_decode(p["ssm"],
+                                        rmsnorm(p["ln"], x, cfg.norm_eps),
+                                        ssm_state, cfg.ssm)
+    if cfg.lif is not None:
+        out, lif_st = _lif_decode(out, state["lif"], cfg)
+        ssm_state = {**ssm_state, "lif": lif_st}
+    return x + out, ssm_state
 
 
 # ---------------------------------------------------------------------------
@@ -159,7 +207,7 @@ def init_lm(key, cfg: ArchConfig):
     if cfg.family == "hybrid":
         # the single weight-shared attention block (zamba2)
         p["shared"] = _init_dense_block(
-            k_shared, cfg.replace(moe=None, mla=None, family="dense"))
+            k_shared, cfg.replace(moe=None, mla=None, family="dense", lif=None))
     return p
 
 
@@ -200,7 +248,7 @@ def lm_forward(params: Params, batch: dict[str, jax.Array], cfg: ArchConfig,
         groups, per = _hybrid_group_shape(cfg)
         blocks = _regroup(params["blocks"], groups, per)
         shared = params["shared"]
-        s_cfg = cfg.replace(moe=None, mla=None, family="dense")
+        s_cfg = cfg.replace(moe=None, mla=None, family="dense", lif=None)
 
         def group(x, gp):
             def inner(x, p):
@@ -241,31 +289,88 @@ def lm_loss(params: Params, batch: dict[str, jax.Array], cfg: ArchConfig,
 
 def init_cache(cfg: ArchConfig, batch: int, max_seq: int,
                dtype=jnp.bfloat16):
-    """Stacked (L, ...) decode state matching the family."""
+    """Stacked (L, ...) decode state matching the family.
+
+    With ``cfg.lif`` set, every block's state additionally carries the
+    branch neuron's {"u","s"} membrane state (the KV-cache analogue for
+    neurons): dense/MLA layers nest the attention cache under "kv" next to
+    "lif"; RWKV/hybrid states gain a sibling "lif" entry.
+    """
     def stack(make, n):
         one = make()
         return jax.tree.map(lambda a: jnp.broadcast_to(a[None],
                                                        (n, *a.shape)), one)
 
+    def with_lif(st: dict):
+        if cfg.lif is not None:
+            st["lif"] = _init_lif_state(batch, cfg, dtype)
+        return st
+
     if cfg.family == "rwkv":
-        return stack(lambda: {
+        return stack(lambda: with_lif({
             "time": rwkv_mod.init_rwkv_state(batch, cfg.rwkv, dtype),
-            "chan": jnp.zeros((batch, 1, cfg.d_model), dtype)},
+            "chan": jnp.zeros((batch, 1, cfg.d_model), dtype)}),
             cfg.num_layers)
     if cfg.family == "hybrid":
         groups, per = _hybrid_group_shape(cfg)
-        mamba = stack(lambda: ssm_mod.init_ssm_state(batch, cfg.ssm, dtype),
-                      cfg.num_layers)
+        mamba = stack(
+            lambda: with_lif(ssm_mod.init_ssm_state(batch, cfg.ssm, dtype)),
+            cfg.num_layers)
         mamba = jax.tree.map(
             lambda a: a.reshape(groups, per, *a.shape[1:]), mamba)
         shared = stack(lambda: attn_mod.init_kv_cache(batch, cfg.attn,
                                                       max_seq, dtype), groups)
         return {"mamba": mamba, "shared": shared}
     if cfg.mla is not None:
-        return stack(lambda: mla_mod.init_mla_cache(batch, cfg.mla, max_seq,
-                                                    dtype), cfg.num_layers)
-    return stack(lambda: attn_mod.init_kv_cache(batch, cfg.attn, max_seq,
-                                                dtype), cfg.num_layers)
+        kv = lambda: mla_mod.init_mla_cache(batch, cfg.mla, max_seq,  # noqa: E731
+                                            dtype)
+    else:
+        kv = lambda: attn_mod.init_kv_cache(batch, cfg.attn, max_seq,  # noqa: E731
+                                            dtype)
+    if cfg.lif is not None:
+        return stack(lambda: with_lif({"kv": kv()}), cfg.num_layers)
+    return stack(kv, cfg.num_layers)
+
+
+# ---------------------------------------------------------------------------
+# Slot-sliced cache helpers (continuous-batching serving engine)
+# ---------------------------------------------------------------------------
+
+def cache_batch_axes(cfg: ArchConfig, cache):
+    """Per-leaf slot(=batch)-axis index, same pytree structure as ``cache``.
+
+    Every decode-state leaf is stacked ``(L, slots, ...)`` except the hybrid
+    family's mamba states, which regroup to ``(groups, per, slots, ...)``.
+    """
+    if cfg.family == "hybrid":
+        return {"mamba": jax.tree.map(lambda _: 2, cache["mamba"]),
+                "shared": jax.tree.map(lambda _: 1, cache["shared"])}
+    return jax.tree.map(lambda _: 1, cache)
+
+
+def reset_cache_slots(cache, slot_mask: jax.Array, cfg: ArchConfig):
+    """Reset the masked slots' decode state to init without disturbing the
+    neighbouring slots.
+
+    Every family's init state is all-zeros (attention/MLA KV, SSM/RWKV
+    recurrences, LIF membrane — asserted against :func:`init_cache` by
+    ``tests/test_serving_continuous.py``), so reset is a masked zero-fill
+    along each leaf's slot axis. ``slot_mask``: (slots,) bool.
+    """
+    axes = cache_batch_axes(cfg, cache)
+
+    def reset(a, ax):
+        m = slot_mask.reshape((1,) * ax + (-1,) + (1,) * (a.ndim - ax - 1))
+        return jnp.where(m, jnp.zeros((), a.dtype), a)
+
+    return jax.tree.map(reset, cache, axes)
+
+
+def cache_slot_state(cache, slot: int, cfg: ArchConfig):
+    """One slot's slice of the decode cache (test/debug helper)."""
+    axes = cache_batch_axes(cfg, cache)
+    return jax.tree.map(lambda a, ax: jnp.take(a, slot, axis=ax),
+                        cache, axes)
 
 
 def lm_decode_step(params: Params, cache, tokens: jax.Array, pos: jax.Array,
@@ -284,7 +389,7 @@ def lm_decode_step(params: Params, cache, tokens: jax.Array, pos: jax.Array,
         groups, per = _hybrid_group_shape(cfg)
         blocks = _regroup(params["blocks"], groups, per)
         shared = params["shared"]
-        s_cfg = cfg.replace(moe=None, mla=None, family="dense")
+        s_cfg = cfg.replace(moe=None, mla=None, family="dense", lif=None)
 
         def group(x, ps):
             gp, st_m, st_a = ps

@@ -1,0 +1,10 @@
+"""Production serving: continuous batching over a persistent slot cache.
+
+Public API: :class:`repro.serving.engine.ServingEngine` (the engine),
+:class:`repro.serving.scheduler.Request` / ``FIFOScheduler`` (the request
+lifecycle and slot bookkeeping). See ``docs/SERVING.md``.
+"""
+from repro.serving.engine import ServingEngine
+from repro.serving.scheduler import FIFOScheduler, Request, SlotError
+
+__all__ = ["FIFOScheduler", "Request", "ServingEngine", "SlotError"]

@@ -1,12 +1,16 @@
-"""Serving engine: wave batching correctness across model families."""
+"""Serving engine: batched decode correctness across model families.
+
+The deeper continuous-batching contracts (interleaved parity, slot-state
+leaks, faults, scheduler properties) live in ``test_serving_continuous.py``
+and ``test_serving_sched.py``.
+"""
 import jax
-import jax.numpy as jnp
-import numpy as np
 import pytest
 
+from _serving_parity import assert_greedy_parity
 from repro.configs.registry import get_config, reduced
 from repro.models.common import split_tree
-from repro.models.lm import init_cache, init_lm, lm_decode_step
+from repro.models.lm import init_lm
 from repro.serving.engine import Request, ServingEngine
 
 KEY = jax.random.PRNGKey(0)
@@ -22,27 +26,13 @@ def _engine(name, **kw):
 @pytest.mark.parametrize("name", ["qwen3-0.6b", "rwkv6-7b"])
 def test_greedy_matches_manual_decode(name):
     engine, params, cfg = _engine(name)
-    prompt = [3, 17, 42]
-    engine.submit(Request(uid=0, prompt=prompt, max_new_tokens=5))
+    req = Request(uid=0, prompt=[3, 17, 42], max_new_tokens=5)
+    engine.submit(req)
     engine.run_to_completion()
-    got = engine.finished[0].output
-
-    # manual single-slot reference
-    cache = init_cache(cfg, 1, 64, dtype=jnp.float32)
-    toks = list(prompt)
-    out = []
-    for t in range(len(prompt) + 5 - 1):
-        tok = jnp.asarray([[toks[t]]], jnp.int32)
-        logits, cache = lm_decode_step(params, cache, tok,
-                                       jnp.asarray([t], jnp.int32), cfg)
-        if t >= len(prompt) - 1:
-            nxt = int(np.argmax(np.asarray(logits)[0]))
-            out.append(nxt)
-            toks.append(nxt)
-    assert got == out
+    assert_greedy_parity(params, cfg, req)
 
 
-def test_wave_batches_multiple_requests():
+def test_batches_multiple_requests():
     engine, _, cfg = _engine("qwen3-0.6b")
     for uid in range(6):
         engine.submit(Request(uid=uid, prompt=[uid + 1, uid + 2],
@@ -53,12 +43,13 @@ def test_wave_batches_multiple_requests():
 
 
 def test_batched_slots_are_independent():
-    """A request's output must not depend on its wave-mates."""
+    """A request's output must not depend on its batch-mates: each must be
+    a valid solo greedy trajectory (batch-mate-free oracle)."""
     engine, params, cfg = _engine("qwen3-0.6b")
-    engine.submit(Request(uid=0, prompt=[5, 9], max_new_tokens=4))
-    engine.submit(Request(uid=1, prompt=[100, 7, 3], max_new_tokens=4))
+    a = Request(uid=0, prompt=[5, 9], max_new_tokens=4)
+    b = Request(uid=1, prompt=[100, 7, 3], max_new_tokens=4)
+    engine.submit(a)
+    engine.submit(b)
     engine.run_to_completion()
-    solo = ServingEngine(params, cfg, slots=4, max_seq=64)
-    solo.submit(Request(uid=0, prompt=[5, 9], max_new_tokens=4))
-    solo.run_to_completion()
-    assert engine.finished[0].output == solo.finished[0].output
+    for req in (a, b):
+        assert_greedy_parity(params, cfg, req)
