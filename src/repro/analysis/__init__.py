@@ -1,0 +1,34 @@
+"""Static analysis for the execution stack: plan audit, repo lint,
+trace-count guards, bench drift. CLI: ``python -m repro.analysis``
+(= the ``repro-analyze`` console script); catalog in ``docs/ANALYSIS.md``.
+
+Submodules are imported lazily — ``repro.analysis.tracing`` is used inside
+the serving engine's hot path and must not drag the lint/audit machinery
+(or model imports) in with it.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+__all__ = ["Finding", "assert_trace_count", "bench_drift", "lint_paths",
+           "lint_source", "run_audit", "trace_count"]
+
+_LAZY = {
+    "Finding": ("repro.analysis.report", "Finding"),
+    "assert_trace_count": ("repro.analysis.tracing", "assert_trace_count"),
+    "bench_drift": ("repro.analysis.drift", "bench_drift"),
+    "lint_paths": ("repro.analysis.lint", "lint_paths"),
+    "lint_source": ("repro.analysis.lint", "lint_source"),
+    "run_audit": ("repro.analysis.audit", "run_audit"),
+    "trace_count": ("repro.analysis.tracing", "trace_count"),
+}
+
+
+def __getattr__(name: str) -> Any:
+    try:
+        module, attr = _LAZY[name]
+    except KeyError:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r}") from None
+    import importlib
+    return getattr(importlib.import_module(module), attr)

@@ -1,0 +1,82 @@
+"""CLI for the analysis subsystem: ``python -m repro.analysis`` (also the
+``repro-analyze`` console script).
+
+    python -m repro.analysis --lint --audit          # the CI analysis leg
+    python -m repro.analysis --lint --paths src
+    python -m repro.analysis --audit --batch 16
+    python -m repro.analysis --bench-drift BENCH.json
+    python -m repro.analysis --rules                 # lint-rule catalog
+
+Exit status is 0 when no check reports an error; ``--strict`` promotes
+warnings (e.g. VMEM-over-budget sites, bench drift) to errors.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+#: Default lint surface: every tree that ships or exercises executable
+#: code. Golden known-bad snippets (tests/data/) are excluded by lint.
+DEFAULT_PATHS = ("src", "benchmarks", "examples", "tests")
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro-analyze",
+        description="Static execution-plan auditor + repo lint pass "
+                    "(docs/ANALYSIS.md)")
+    ap.add_argument("--lint", action="store_true",
+                    help="run the E2A lint rules over --paths")
+    ap.add_argument("--audit", action="store_true",
+                    help="audit execution plans, serving caches and mesh "
+                         "renders for every registered config x policy")
+    ap.add_argument("--bench-drift", metavar="BENCH_JSON", default=None,
+                    help="diff a BENCH.json artifact against --baseline")
+    ap.add_argument("--baseline", default="benchmarks/BENCH_seed.json",
+                    help="seed snapshot for --bench-drift (default: "
+                         "%(default)s)")
+    ap.add_argument("--paths", nargs="*", default=None,
+                    help=f"lint roots (default: {' '.join(DEFAULT_PATHS)})")
+    ap.add_argument("--batch", type=int, default=1,
+                    help="global batch for the audit's VMEM estimates "
+                         "(default: %(default)s)")
+    ap.add_argument("--strict", action="store_true",
+                    help="promote warnings to errors")
+    ap.add_argument("-v", "--verbose", action="store_true",
+                    help="also print info findings")
+    ap.add_argument("--rules", action="store_true",
+                    help="print the lint-rule catalog and exit")
+    args = ap.parse_args(argv)
+
+    if args.rules:
+        from repro.analysis.lint import RULES
+        for rule, desc in sorted(RULES.items()):
+            print(f"{rule}  {desc}")
+        return 0
+
+    if not (args.lint or args.audit or args.bench_drift):
+        ap.error("nothing to do: pass --lint, --audit and/or --bench-drift")
+
+    findings = []
+    if args.lint:
+        from repro.analysis.lint import lint_paths
+        paths = args.paths if args.paths is not None else [
+            p for p in DEFAULT_PATHS if Path(p).exists()]
+        findings += lint_paths(paths)
+    if args.audit:
+        from repro.analysis.audit import run_audit
+        findings += run_audit(batch=args.batch)
+    if args.bench_drift:
+        from repro.analysis.drift import bench_drift
+        findings += bench_drift(args.bench_drift, args.baseline)
+
+    from repro.analysis.report import (exit_code, promote_warnings, render)
+    if args.strict:
+        findings = promote_warnings(findings)
+    print(render(findings, verbose=args.verbose))
+    return exit_code(findings)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,362 @@
+"""Repo-specific AST lint: past bug classes as mechanical rules.
+
+Every rule encodes a hazard this repo has actually shipped (and fixed):
+
+* **E2A001** — host-buffer mutation after async dispatch without a
+  snapshot. The PR 6 race: on CPU, ``jnp.asarray``/``jax.device_put`` can
+  zero-copy *alias* a numpy buffer while dispatch is still in flight, so a
+  later in-place write to the same buffer races the launch
+  (nondeterministic logits under load). Pass a ``.copy()`` instead.
+* **E2A002** — a literal ``interpret=True``/``False`` default on a kernel
+  entry point. The PR 5 footgun: a baked-in ``True`` silently emulates on
+  real TPUs; ``interpret=None`` auto-resolution
+  (``repro.core.backend.resolve_interpret``) is the only safe default.
+* **E2A003** — host-numpy (``np.*``) or dynamic-shape ``jnp`` calls inside
+  a ``pallas_call`` kernel body. Kernel bodies trace with ``pl``/``lax``
+  primitives; ``np.*`` executes at trace time on tracers and
+  ``jnp.nonzero``-style data-dependent shapes cannot lower at all.
+* **E2A004** — an unhashable literal (list/dict/set) passed in a
+  ``static_argnums``/``static_argnames`` slot of a jitted function: jit
+  static args are hashed, so this raises at call time — and mutable
+  "constants" would silently stale-cache even if it didn't.
+* **E2A005** — a ``DeprecationWarning`` emitted without an explicit
+  ``stacklevel``: the warning then points at repro internals instead of
+  the user's call site (the shim tests pin this contract).
+
+Findings are suppressed per line with ``# e2a: ignore[E2A001]`` (comma
+lists allowed; bare ``# e2a: ignore`` silences every rule) on the flagged
+line or the line above. See ``docs/ANALYSIS.md`` for the full catalog and
+how to add a rule.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+from typing import Iterable, Iterator, Sequence
+
+from repro.analysis.report import Finding, error
+
+__all__ = ["RULES", "lint_paths", "lint_source"]
+
+#: rule id -> one-line description (the CLI prints this catalog).
+RULES: dict[str, str] = {
+    "E2A001": "in-place write to a host buffer previously handed to "
+              "jnp.asarray/jax.device_put without a .copy() snapshot",
+    "E2A002": "literal interpret=True/False default on a kernel entry "
+              "point (use interpret=None auto-resolution)",
+    "E2A003": "host numpy / dynamic-shape jnp call inside a pallas_call "
+              "kernel body (use pl/lax primitives)",
+    "E2A004": "unhashable literal passed in a static_argnums/"
+              "static_argnames slot of a jitted function",
+    "E2A005": "DeprecationWarning without an explicit stacklevel",
+}
+
+_IGNORE_RE = re.compile(r"#\s*e2a:\s*ignore(?:\[([A-Z0-9,\s]+)\])?")
+
+#: Call targets whose bare array arguments alias host buffers (E2A001).
+_DISPATCH_FUNCS = {"jnp.asarray", "jax.numpy.asarray", "jax.device_put",
+                   "device_put"}
+
+#: jnp functions with data-dependent output shapes — unloweable in a
+#: kernel body even via the jnp-on-tracers path (E2A003).
+_DYNAMIC_SHAPE_FNS = {"nonzero", "flatnonzero", "argwhere", "unique",
+                      "unique_values"}
+
+
+def _unparse(node: ast.AST) -> str:
+    try:
+        return ast.unparse(node)
+    except Exception:   # pragma: no cover - malformed node
+        return ""
+
+
+def _suppressed(lines: Sequence[str], lineno: int, rule: str) -> bool:
+    for ln in (lineno, lineno - 1):
+        if 1 <= ln <= len(lines):
+            m = _IGNORE_RE.search(lines[ln - 1])
+            if m and (m.group(1) is None or
+                      rule in {r.strip() for r in m.group(1).split(",")}):
+                return True
+    return False
+
+
+def _func_scopes(tree: ast.AST) -> Iterator[ast.AST]:
+    """Module plus every function def (each checked as one E2A001 scope)."""
+    yield tree
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+def _ordered_nodes(scope: ast.AST) -> list[ast.AST]:
+    """The scope's own nodes (nested defs excluded), in source order."""
+    own: list[ast.AST] = []
+
+    def collect(node: ast.AST) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.Lambda)):
+                continue   # nested defs get their own scope
+            own.append(child)
+            collect(child)
+
+    collect(scope)
+    return sorted((n for n in own if hasattr(n, "lineno")),
+                  key=lambda n: (n.lineno, n.col_offset))
+
+
+# -- E2A001 ------------------------------------------------------------------
+
+def _rule_e2a001(tree: ast.AST) -> Iterator[tuple[int, str]]:
+    for scope in _func_scopes(tree):
+        dispatched: dict[str, int] = {}
+        for node in _ordered_nodes(scope):
+            if isinstance(node, ast.Call) and \
+                    _unparse(node.func) in _DISPATCH_FUNCS:
+                for arg in node.args:
+                    if isinstance(arg, (ast.Name, ast.Attribute)):
+                        dispatched[_unparse(arg)] = node.lineno
+            targets = []
+            if isinstance(node, ast.Assign):
+                targets = node.targets
+            elif isinstance(node, ast.AugAssign):
+                targets = [node.target]
+            for tgt in targets:
+                if isinstance(tgt, (ast.Name, ast.Attribute)):
+                    # rebinding the name ends the alias hazard
+                    dispatched.pop(_unparse(tgt), None)
+                elif isinstance(tgt, ast.Subscript):
+                    buf = _unparse(tgt.value)
+                    at = dispatched.get(buf)
+                    if at is not None and node.lineno > at:
+                        yield node.lineno, (
+                            f"in-place write to {buf!r} after it was "
+                            f"handed to an async dispatch at line {at} — "
+                            f"on CPU the device array can zero-copy alias "
+                            f"this buffer; snapshot with "
+                            f"{buf}.copy() at the dispatch")
+
+
+# -- E2A002 ------------------------------------------------------------------
+
+def _rule_e2a002(tree: ast.AST) -> Iterator[tuple[int, str]]:
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        args = node.args
+        for params, defaults in ((args.args + args.posonlyargs,
+                                  args.defaults),
+                                 (args.kwonlyargs, args.kw_defaults)):
+            pad = len(params) - len(defaults)
+            for param, default in zip(params[pad:], defaults):
+                if param.arg == "interpret" and \
+                        isinstance(default, ast.Constant) and \
+                        default.value in (True, False):
+                    yield default.lineno, (
+                        f"{node.name}() defaults interpret="
+                        f"{default.value} — a baked-in literal silently "
+                        f"emulates (or crashes) off its home backend; "
+                        f"default to interpret=None and resolve via "
+                        f"repro.core.backend.resolve_interpret")
+
+
+# -- E2A003 ------------------------------------------------------------------
+
+def _kernel_bodies(tree: ast.AST) -> Iterator[ast.AST]:
+    """Function defs that are pallas kernel bodies: referenced (possibly
+    via functools.partial) as the first argument of a ``pallas_call``, or
+    defs whose signature is ref-shaped (>= 2 params ending in ``_ref``)."""
+    named: dict[str, ast.AST] = {
+        n.name: n for n in ast.walk(tree)
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+    seen: set[ast.AST] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and \
+                _unparse(node.func).endswith("pallas_call") and node.args:
+            target = node.args[0]
+            if isinstance(target, ast.Call) and \
+                    _unparse(target.func).endswith("partial") and \
+                    target.args:
+                target = target.args[0]
+            if isinstance(target, ast.Name) and target.id in named:
+                fn = named[target.id]
+                if fn not in seen:
+                    seen.add(fn)
+                    yield fn
+    for fn in named.values():
+        if fn in seen:
+            continue
+        params = [a.arg for a in fn.args.args]
+        if sum(p.endswith("_ref") for p in params) >= 2:
+            seen.add(fn)
+            yield fn
+
+
+def _rule_e2a003(tree: ast.AST) -> Iterator[tuple[int, str]]:
+    for body in _kernel_bodies(tree):
+        for node in ast.walk(body):
+            if not (isinstance(node, ast.Call) and
+                    isinstance(node.func, ast.Attribute)):
+                continue
+            root = node.func.value
+            if not isinstance(root, ast.Name):
+                continue
+            fn = node.func.attr
+            if root.id == "np":
+                yield node.lineno, (
+                    f"np.{fn}() inside kernel body {body.name}() runs "
+                    f"host numpy on tracers at trace time — use jnp/pl/"
+                    f"lax primitives")
+            elif root.id == "jnp" and fn in _DYNAMIC_SHAPE_FNS:
+                yield node.lineno, (
+                    f"jnp.{fn}() inside kernel body {body.name}() has a "
+                    f"data-dependent output shape and cannot lower — "
+                    f"restructure with masks/pl.when")
+
+
+# -- E2A004 ------------------------------------------------------------------
+
+_UNHASHABLE = (ast.List, ast.Dict, ast.Set, ast.ListComp, ast.DictComp,
+               ast.SetComp, ast.GeneratorExp)
+
+
+def _static_spec(call: ast.Call) -> tuple[set[int], set[str]]:
+    nums: set[int] = set()
+    names: set[str] = set()
+    for kw in call.keywords:
+        if kw.arg == "static_argnums":
+            vals = kw.value.elts if isinstance(
+                kw.value, (ast.Tuple, ast.List)) else [kw.value]
+            nums |= {v.value for v in vals
+                     if isinstance(v, ast.Constant)
+                     and isinstance(v.value, int)}
+        elif kw.arg == "static_argnames":
+            vals = kw.value.elts if isinstance(
+                kw.value, (ast.Tuple, ast.List)) else [kw.value]
+            names |= {v.value for v in vals
+                      if isinstance(v, ast.Constant)
+                      and isinstance(v.value, str)}
+    return nums, names
+
+
+def _is_jit(call: ast.Call) -> bool:
+    return _unparse(call.func) in ("jax.jit", "jit")
+
+
+def _rule_e2a004(tree: ast.AST) -> Iterator[tuple[int, str]]:
+    # jitted callables with static slots: `f = jax.jit(g, static_*=...)`
+    # assignments and `@partial(jax.jit, static_*=...)` decorated defs.
+    jitted: dict[str, tuple[set[int], set[str]]] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and \
+                isinstance(node.value, ast.Call) and _is_jit(node.value):
+            spec = _static_spec(node.value)
+            if spec != (set(), set()):
+                for tgt in node.targets:
+                    if isinstance(tgt, (ast.Name, ast.Attribute)):
+                        jitted[_unparse(tgt)] = spec
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for deco in node.decorator_list:
+                if isinstance(deco, ast.Call) and (
+                        _is_jit(deco) or
+                        (_unparse(deco.func).endswith("partial") and
+                         deco.args and _is_jit_ref(deco.args[0]))):
+                    spec = _static_spec(deco)
+                    if spec != (set(), set()):
+                        jitted[node.name] = spec
+
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        spec = jitted.get(_unparse(node.func))
+        if spec is None:
+            continue
+        nums, names = spec
+        for i, arg in enumerate(node.args):
+            if i in nums and isinstance(arg, _UNHASHABLE):
+                yield arg.lineno, (
+                    f"static_argnums slot {i} of {_unparse(node.func)}() "
+                    f"receives an unhashable {type(arg).__name__.lower()} "
+                    f"literal — jit static args are hashed; pass a tuple/"
+                    f"frozen dataclass")
+        for kw in node.keywords:
+            if kw.arg in names and isinstance(kw.value, _UNHASHABLE):
+                yield kw.value.lineno, (
+                    f"static_argnames arg {kw.arg!r} of "
+                    f"{_unparse(node.func)}() receives an unhashable "
+                    f"{type(kw.value).__name__.lower()} literal — jit "
+                    f"static args are hashed; pass a tuple/frozen "
+                    f"dataclass")
+
+
+def _is_jit_ref(node: ast.AST) -> bool:
+    return _unparse(node) in ("jax.jit", "jit")
+
+
+# -- E2A005 ------------------------------------------------------------------
+
+def _rule_e2a005(tree: ast.AST) -> Iterator[tuple[int, str]]:
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call) and
+                _unparse(node.func) in ("warnings.warn", "warn")):
+            continue
+        if not any("DeprecationWarning" in _unparse(a)
+                   for a in list(node.args) + list(node.keywords)):
+            continue
+        has_stacklevel = (len(node.args) >= 3 or
+                          any(kw.arg == "stacklevel"
+                              for kw in node.keywords))
+        if not has_stacklevel:
+            yield node.lineno, (
+                "DeprecationWarning without an explicit stacklevel: the "
+                "warning will point at repro internals, not the user's "
+                "call site")
+
+
+_RULE_FNS = {
+    "E2A001": _rule_e2a001,
+    "E2A002": _rule_e2a002,
+    "E2A003": _rule_e2a003,
+    "E2A004": _rule_e2a004,
+    "E2A005": _rule_e2a005,
+}
+
+
+def lint_source(source: str, path: str = "<string>") -> list[Finding]:
+    """Run every rule over one source text; returns error findings."""
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as e:
+        return [error("lint.parse", f"{path}:{e.lineno or 0}",
+                      f"syntax error: {e.msg}")]
+    lines = source.splitlines()
+    findings = []
+    for rule, fn in _RULE_FNS.items():
+        for lineno, message in fn(tree):
+            if not _suppressed(lines, lineno, rule):
+                findings.append(error(rule, f"{path}:{lineno}", message))
+    return findings
+
+
+#: Directories never linted: golden known-bad snippets live here.
+_EXCLUDED_PARTS = {"data", "__pycache__", ".git"}
+
+
+def iter_py_files(paths: Iterable[str | Path]) -> Iterator[Path]:
+    for p in paths:
+        p = Path(p)
+        if p.is_file() and p.suffix == ".py":
+            yield p
+        elif p.is_dir():
+            for f in sorted(p.rglob("*.py")):
+                if not _EXCLUDED_PARTS & set(f.parts):
+                    yield f
+
+
+def lint_paths(paths: Iterable[str | Path]) -> list[Finding]:
+    """Lint every ``.py`` under ``paths`` (golden-data dirs excluded)."""
+    findings: list[Finding] = []
+    for f in iter_py_files(paths):
+        findings.extend(lint_source(f.read_text(), str(f)))
+    return findings

@@ -138,6 +138,12 @@ class ExecutionPolicy:
     backend: str = "jnp"
     interpret: bool | None = None
     overrides: tuple[tuple[str, str], ...] = ()
+    #: Validate override keys against the registered site tables at
+    #: construction (``strict=False`` is the forward-compat escape hatch
+    #: for policies naming sites of models this process never imports).
+    #: Excluded from eq/hash: strictness is a construction-time check, not
+    #: an execution behavior, and must never force a retrace.
+    strict: bool = dataclasses.field(default=True, compare=False)
 
     def __post_init__(self):
         validate_backend(self.backend)
@@ -147,6 +153,8 @@ class ExecutionPolicy:
         object.__setattr__(
             self, "overrides",
             tuple(sorted((str(k), str(v)) for k, v in ov)))
+        if self.strict:
+            _validate_override_keys(self.overrides)
 
     def resolve(self, site: str, op: str) -> str:
         """Implementation name for ``site`` (an instance of ``op``).
@@ -409,6 +417,84 @@ def _ensure_builtins() -> None:
 
 
 # ---------------------------------------------------------------------------
+# Site-table registry (construction-time override validation)
+# ---------------------------------------------------------------------------
+
+_SITE_TABLES: dict[str, frozenset[str]] = {}
+_SITE_GROUPS: dict[str, frozenset[str]] = {}
+_site_tables_loading = False
+_site_tables_loaded = False
+
+
+def register_site_table(model: str, sites: Iterable[str],
+                        groups: Iterable[str] = ()) -> None:
+    """Declare a model family's site names (plus any group prefixes that
+    are valid override keys on their own, e.g. ``"tokenizer.conv"``).
+
+    Models register at import time; :class:`ExecutionPolicy` validates
+    override keys against the union of all tables at construction, so a
+    typo'd site fails where the policy is *written*, not at plan time (or
+    never). Re-registration replaces the model's previous table."""
+    _SITE_TABLES[str(model)] = frozenset(str(s) for s in sites)
+    _SITE_GROUPS[str(model)] = frozenset(str(g) for g in groups)
+
+
+def site_tables() -> dict[str, frozenset[str]]:
+    """``model -> registered site names`` (builtin tables imported first)."""
+    _ensure_site_tables()
+    return dict(_SITE_TABLES)
+
+
+def known_site_keys() -> frozenset[str]:
+    """Every valid non-op override key: registered site names, declared
+    groups, and every dotted prefix of a registered site."""
+    _ensure_site_tables()
+    keys: set[str] = set()
+    for sites in _SITE_TABLES.values():
+        for s in sites:
+            keys.add(s)
+            while "." in s:
+                s = s.rsplit(".", 1)[0]
+                keys.add(s)
+    for groups in _SITE_GROUPS.values():
+        keys.update(groups)
+    return frozenset(keys)
+
+
+def _ensure_site_tables() -> None:
+    # The loading flag is a re-entrancy guard: policies constructed *during*
+    # these imports skip validation instead of seeing a partial registry.
+    global _site_tables_loading, _site_tables_loaded
+    if _site_tables_loaded or _site_tables_loading:
+        return
+    _site_tables_loading = True
+    try:
+        import repro.core.spikingformer  # noqa: F401  "spikingformer" table
+        import repro.models.lm           # noqa: F401  "lm" table
+    finally:
+        _site_tables_loading = False
+    _site_tables_loaded = True
+
+
+def _validate_override_keys(overrides: tuple[tuple[str, str], ...]) -> None:
+    site_keyed = [k for k, _ in overrides if k not in OPS]
+    if not site_keyed or _site_tables_loading:
+        return
+    known = known_site_keys()
+    groups = frozenset().union(*_SITE_GROUPS.values()) if _SITE_GROUPS \
+        else frozenset()
+    unknown = [k for k in site_keyed
+               if k not in known
+               and not any(k.startswith(g + ".") for g in groups)]
+    if unknown:
+        raise ValueError(
+            f"ExecutionPolicy overrides {unknown} name no registered site, "
+            f"site group or op. Known sites: "
+            f"{ {m: sorted(s) for m, s in sorted(_SITE_TABLES.items())} }, "
+            f"ops: {OPS}. Pass strict=False for forward-compat site names.")
+
+
+# ---------------------------------------------------------------------------
 # Named policies + environment default
 # ---------------------------------------------------------------------------
 
@@ -480,7 +566,8 @@ def policy_from_flags(backend: str | None = None,
     return ExecutionPolicy(
         backend=new_backend,
         interpret=interpret if interpret is not None else base.interpret,
-        overrides=tuple(ov.items()))
+        overrides=tuple(ov.items()),
+        strict=base.strict)
 
 
 def warn_deprecated_flags(what: str, stacklevel: int = 2) -> None:
@@ -518,7 +605,8 @@ __all__ = [
     "BACKENDS", "ExecutionPolicy", "FUSED_EPILOGUE_IMPLS", "NAMED_POLICIES",
     "OPS", "SiteDecision", "apply_legacy_exec_flags", "available_impls",
     "default_impl", "default_policy", "fused_epilogue_fallback", "get_kernel",
-    "list_named_policies", "log_fallbacks", "named_policy", "packed_fallback",
-    "plan_sites", "policy_from_flags", "register_kernel", "runtime_fallback",
+    "known_site_keys", "list_named_policies", "log_fallbacks", "named_policy",
+    "packed_fallback", "plan_sites", "policy_from_flags", "register_kernel",
+    "register_site_table", "runtime_fallback", "site_tables",
     "unregister_kernel", "warn_deprecated_flags",
 ]

@@ -21,8 +21,8 @@ from jax.sharding import PartitionSpec as P
 from repro.core.lif import LIFConfig, lif_scan
 from repro.core.policy import (ExecutionPolicy, apply_legacy_exec_flags,
                                get_kernel, plan_sites, policy_from_flags,
-                               register_kernel, runtime_fallback,
-                               warn_deprecated_flags)
+                               register_kernel, register_site_table,
+                               runtime_fallback, warn_deprecated_flags)
 from repro.core.spiking_layers import (ACT_SPECS, BlockConfig, _bn_pallas,
                                        _neuron_layer_site, bn_apply,
                                        block_apply, init_block, init_bn,
@@ -31,6 +31,17 @@ from repro.models.common import BATCH, MODEL, shard, spec_is_leaf
 
 Params = dict[str, Any]
 State = dict[str, Any]
+
+#: Site table for construction-time ExecutionPolicy validation: every site
+#: this model dispatches through (per-stage conv sites at the paper's
+#: 224/14 geometry, 4 stages). The "tokenizer.conv" group admits any stage
+#: index, so shallower/deeper tokenizers stay addressable as a group.
+register_site_table(
+    "spikingformer",
+    tuple(f"tokenizer.conv.{i}" for i in range(4)) + (
+        "tokenizer.bn", "tokenizer.lif", "pssa.lif", "pssa.qkv",
+        "attn_qk", "attn_av", "pssa.proj", "smlp.lif", "smlp.a", "smlp.b"),
+    groups=("tokenizer.conv",))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -182,6 +193,14 @@ class SpikingFormerConfig:
         same way.
         """
         rows = plan_sites(self.policy, self.execution_site_specs())
+        # Attention pack dims are architectural: head_dim = d_model/n_heads
+        # and N = patch_grid^2 are fixed by the hyperparameters, so a ragged
+        # dim there (e.g. N=196 at the paper geometry) is a property of the
+        # model, not a policy mistake — the demotion is expected, unlike a
+        # ragged conv/linear contraction, which a channel-count change fixes.
+        rows[:] = [dataclasses.replace(r, expected=True)
+                   if r.op in ("attn_qk", "attn_av") and r.note else r
+                   for r in rows]
         conv_rows = [r for r in rows if r.op == "conv"]
 
         def annotate(site, subset, what):

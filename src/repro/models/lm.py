@@ -25,6 +25,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.core.lif import lif_decode_step, lif_scan
+from repro.core.policy import register_site_table
 from repro.models import attention as attn_mod
 from repro.models import mla as mla_mod
 from repro.models import moe as moe_mod
@@ -44,6 +45,8 @@ Params = dict[str, Any]
 
 #: Registry site of the per-block branch neuron (per-site policy overrides).
 LM_LIF_SITE = "lm.ffn.lif"
+
+register_site_table("lm", (LM_LIF_SITE,))
 
 
 def _seq_lif(f: jax.Array, cfg: ArchConfig) -> jax.Array:

@@ -19,8 +19,8 @@ wave. This engine replaces that with continuous batching:
 * **Single-trace decode.** One jit'd fused step (slot reset + batched
   one-token decode) serves prefill (teacher-forcing prompt tokens) and
   generation for all slots; its shapes never change, so there is exactly
-  ONE trace for the engine's lifetime (asserted by the test suite via
-  ``_step._cache_size()``).
+  ONE trace for the engine's lifetime (asserted by the test suite via the
+  ``repro.analysis.tracing`` trace-count guard).
 * **Scheduler.** A FIFO queue + slot map (``serving.scheduler``) with
   per-request deadlines, max-token budgets, and explicit (never silent)
   over-capacity rejection.
@@ -40,6 +40,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.tracing import trace_count
 from repro.configs.base import ArchConfig
 from repro.models.lm import (cache_slot_state, init_cache, lm_decode_step,
                              reset_cache_slots)
@@ -226,11 +227,10 @@ class ServingEngine:
 
     def trace_count(self) -> int | None:
         """Number of traces the fused step has compiled (the single-trace
-        contract says this is 1); None when jax does not expose it."""
-        try:
-            return self._step._cache_size()
-        except AttributeError:
-            return None
+        contract says this is 1); None when jax does not expose the hook.
+        Delegates to :func:`repro.analysis.tracing.trace_count`, the same
+        guard the trace-count tests pin ``make_train_step`` with."""
+        return trace_count(self._step)
 
     # -- internals -----------------------------------------------------------
 

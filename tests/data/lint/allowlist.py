@@ -1,0 +1,21 @@
+"""Golden snippet for the allowlist comment: each violation here carries
+an ``# e2a: ignore[...]`` and must produce NO findings — except the last
+one, whose ignore names a different rule."""
+import warnings
+
+
+def acknowledged_shim():
+    # e2a: ignore[E2A005]
+    warnings.warn("old", DeprecationWarning)
+
+
+def kernel_with_reason(x, interpret=True):   # e2a: ignore[E2A002]
+    return x, interpret
+
+
+def bare_ignore(x, interpret=False):   # e2a: ignore
+    return x, interpret
+
+
+def wrong_rule(x, interpret=True):   # e2a: ignore[E2A001]
+    return x, interpret   # still flagged: the ignore names another rule

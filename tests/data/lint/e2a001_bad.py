@@ -1,0 +1,22 @@
+"""Golden BAD snippet for E2A001: the PR 6 race shape — in-place write to
+a host buffer previously handed to an async dispatch, no snapshot."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Engine:
+    def __init__(self, step):
+        self._step = step
+        self._next_tok = np.zeros((4, 1), np.int32)
+        self._pos = np.zeros(4, np.int32)
+
+    def step(self):
+        # BAD: jnp.asarray can zero-copy alias _next_tok / _pos on CPU
+        # while the launch is still in flight...
+        logits = self._step(jnp.asarray(self._next_tok),
+                            jax.device_put(self._pos))
+        # ...and these writes then race the dispatch.
+        self._next_tok[0, 0] = 7
+        self._pos[0] += 1
+        return logits

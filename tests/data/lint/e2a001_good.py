@@ -1,0 +1,27 @@
+"""Golden GOOD snippet for E2A001: snapshot with .copy() at the dispatch
+(or rebind the name) before mutating the host buffer."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Engine:
+    def __init__(self, step):
+        self._step = step
+        self._next_tok = np.zeros((4, 1), np.int32)
+        self._pos = np.zeros(4, np.int32)
+
+    def step(self):
+        # GOOD: the device array aliases a private snapshot, never the
+        # live bookkeeping buffers.
+        logits = self._step(jnp.asarray(self._next_tok.copy()),
+                            jax.device_put(self._pos.copy()))
+        self._next_tok[0, 0] = 7
+        self._pos[0] += 1
+        return logits
+
+    def rebound(self, mask):
+        dev = jnp.asarray(mask)
+        mask = np.zeros_like(mask)   # rebinding ends the alias hazard
+        mask[0] = True
+        return dev

@@ -1,0 +1,12 @@
+"""Golden BAD snippet for E2A002: literal interpret= default on a kernel
+entry point (the PR 5 silent-emulation footgun)."""
+
+
+def fused_kernel(x, *, block_m: int = 128, interpret: bool = True):
+    # BAD: baked-in True silently emulates on a real TPU.
+    return x, block_m, interpret
+
+
+def other_kernel(x, interpret=False):
+    # BAD: baked-in False crashes everywhere without a real accelerator.
+    return x, interpret

@@ -1,0 +1,15 @@
+"""Golden GOOD snippet for E2A002: interpret=None auto-resolution."""
+
+
+def resolve_interpret(interpret):
+    return bool(interpret)
+
+
+def fused_kernel(x, *, block_m: int = 128, interpret: bool | None = None):
+    # GOOD: None resolves per-host (interpret everywhere except real TPU).
+    return x, block_m, resolve_interpret(interpret)
+
+
+def runs_it(x, interpret=None):
+    # Passing a literal at a *call site* is fine — only defaults bake in.
+    return fused_kernel(x, interpret=True if interpret is None else interpret)

@@ -1,0 +1,18 @@
+"""Golden BAD snippet for E2A003: host numpy / dynamic-shape jnp inside a
+pallas_call kernel body."""
+import numpy as np
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _soma_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    # BAD: np.* executes host numpy on tracers at trace time.
+    y = np.tanh(x)
+    # BAD: data-dependent output shape cannot lower in a kernel.
+    idx = jnp.nonzero(y > 0)
+    o_ref[...] = y + idx[0].sum()
+
+
+def soma(x):
+    return pl.pallas_call(_soma_kernel, out_shape=x)(x)

@@ -1,0 +1,19 @@
+"""Golden GOOD snippet for E2A003: pl/lax/jnp-static primitives only in
+the kernel body; host numpy stays outside."""
+import numpy as np
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+SCALE = np.float32(0.5)   # host numpy at module scope is fine
+
+
+def _soma_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    # GOOD: static-shape jnp on tracers lowers fine inside kernels.
+    y = jnp.tanh(x) * SCALE
+    o_ref[...] = lax.select(y > 0, y, jnp.zeros_like(y))
+
+
+def soma(x):
+    return pl.pallas_call(_soma_kernel, out_shape=x)(x)

@@ -1,0 +1,22 @@
+"""Golden BAD snippet for E2A004: unhashable literals in static jit
+slots."""
+from functools import partial
+
+import jax
+
+
+step = jax.jit(lambda state, batch, cfg: state,
+               static_argnames=("cfg",))
+out = step(0, 1, cfg={"lr": 0.1})          # BAD: dict is unhashable
+
+
+pos_step = jax.jit(lambda shapes, x: x, static_argnums=(0,))
+out2 = pos_step([4, 8, 16], 1.0)           # BAD: list is unhashable
+
+
+@partial(jax.jit, static_argnames=("axes",))
+def reduce_fn(x, axes):
+    return x.sum(axes)
+
+
+out3 = reduce_fn(jax.numpy.zeros((2, 2)), axes=[0, 1])   # BAD

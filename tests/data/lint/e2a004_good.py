@@ -1,0 +1,24 @@
+"""Golden GOOD snippet for E2A004: static jit args are hashable (tuples,
+frozen dataclasses, scalars)."""
+from functools import partial
+
+import jax
+
+
+step = jax.jit(lambda state, batch, cfg: state,
+               static_argnames=("cfg",))
+out = step(0, 1, cfg=("lr", 0.1))          # tuple: hashable
+
+
+pos_step = jax.jit(lambda shapes, x: x, static_argnums=(0,))
+out2 = pos_step((4, 8, 16), 1.0)
+
+
+@partial(jax.jit, static_argnames=("axes",))
+def reduce_fn(x, axes):
+    return x.sum(axes)
+
+
+out3 = reduce_fn(jax.numpy.zeros((2, 2)), axes=(0, 1))
+non_static = jax.jit(lambda x: x)
+out4 = non_static([1.0, 2.0])              # traced arg: lists are fine

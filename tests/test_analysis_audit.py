@@ -1,0 +1,100 @@
+"""Tests for the static execution-plan auditor (repro.analysis.audit):
+the current tree passes clean, and each injected regression — a typo'd
+site override, an undeclared %8 packing demotion, an over-budget VMEM
+site, a serving-cache slot-axis mismatch — is caught with the right
+check name and level."""
+import dataclasses
+
+import pytest
+
+import repro.models.lm as lm
+from repro.analysis.audit import (audit_serving_caches,
+                                  audit_spikingformer_plans,
+                                  fused_site_geometries, run_audit)
+from repro.configs.spikingformer import (SPIKINGFORMER_PRESETS,
+                                         get_spikingformer_config)
+from repro.core.policy import known_site_keys, named_policy
+
+
+def _errors(findings):
+    return [f for f in findings if f.level == "error"]
+
+
+def test_clean_tree_audits_without_errors():
+    findings = run_audit()
+    assert _errors(findings) == [], \
+        "\n".join(f.format() for f in _errors(findings))
+
+
+def test_typod_site_override_is_caught():
+    # strict=False is the forward-compat escape hatch on the policy, so
+    # a misspelled site (pssa.kqv) survives construction — the auditor
+    # is the backstop that still refuses it.
+    pol = dataclasses.replace(named_policy("pallas"), strict=False)
+    pol = pol.with_sites({"pssa.kqv": "pallas+spike_mm"})
+    findings = audit_spikingformer_plans(
+        presets=["spikingformer-smoke"], policies={"typod": pol})
+    errs = _errors(findings)
+    assert errs and all(f.check == "audit.plan.overrides" for f in errs)
+    assert any("pssa.kqv" in f.message for f in errs)
+
+
+def test_unexpected_packing_demotion_is_caught(monkeypatch):
+    # d_model=36 breaks the %8 packing contract at pssa/smlp sites in a
+    # way execution_plan does NOT mark expected (unlike the attn_qk /
+    # attn_av head-geometry raggedness, which is annotated).
+    base = SPIKINGFORMER_PRESETS["spikingformer-smoke"]
+    doctored = dataclasses.replace(base, d_model=36)
+    monkeypatch.setitem(SPIKINGFORMER_PRESETS, "spikingformer-doctored",
+                        doctored)
+    findings = audit_spikingformer_plans(
+        presets=["spikingformer-doctored"],
+        policies={"pallas-full": named_policy("pallas-full")})
+    errs = [f for f in _errors(findings) if f.check == "audit.plan.packing"]
+    assert errs, "doctored d_model=36 demotion not flagged"
+
+
+def test_over_budget_vmem_site_is_warned():
+    # The paper-geometry tokenizer conv stages exceed the 12 MiB train-arm
+    # budget; the runtime guard demotes them, so the audit reports a
+    # warning (visible, non-fatal), promotable to error via --strict.
+    findings = audit_spikingformer_plans(
+        presets=["spikingformer-8-512"],
+        policies={"pallas-full": named_policy("pallas-full")})
+    warns = [f for f in findings
+             if f.level == "warning" and f.check == "audit.plan.vmem"]
+    assert warns and any("tokenizer.conv.0" in f.where for f in warns)
+    assert _errors(findings) == []
+
+
+def test_fused_geometries_cover_registered_sites():
+    cfg = get_spikingformer_config("spikingformer-smoke")
+    geoms = fused_site_geometries(cfg, batch=1)
+    known = known_site_keys()
+    for site, shape in geoms.items():
+        assert site in known, site
+        assert len(shape) == 4 and all(d > 0 for d in shape), (site, shape)
+
+
+def test_serving_cache_axis_mismatch_is_caught(monkeypatch):
+    # Claim the slot axis is 0 for every leaf. Layer-stacked caches are
+    # (L, slots, ...), so the audit must see shape[0] != slots. slots=3
+    # on purpose: reduced configs have num_layers == 4 == the default
+    # slots, which would make the doctored axis coincide.
+    real = lm.cache_batch_axes
+
+    def all_axis_zero(cfg):
+        import jax
+        return jax.tree.map(lambda _: 0, real(cfg))
+
+    monkeypatch.setattr(lm, "cache_batch_axes", all_axis_zero)
+    findings = audit_serving_caches(arch_names=["qwen3-0.6b"], slots=3)
+    errs = _errors(findings)
+    assert errs and all(f.check == "audit.serving.cache" for f in errs)
+
+
+def test_serving_cache_audit_is_clean_on_real_helpers():
+    findings = audit_serving_caches(arch_names=["qwen3-0.6b", "rwkv6-7b",
+                                                "zamba2-2.7b"])
+    assert _errors(findings) == [], \
+        "\n".join(f.format() for f in _errors(findings))

@@ -1,0 +1,85 @@
+"""Golden-file tests for the E2A lint rules (repro.analysis.lint): every
+rule catches its known-bad snippet, stays silent on the known-good twin,
+honors the ``# e2a: ignore[...]`` allowlist, and the CLI turns findings
+into exit codes. The snippets live in tests/data/lint/ — a directory the
+repo-wide lint pass itself excludes."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.analysis.lint import RULES, iter_py_files, lint_paths, lint_source
+
+DATA = Path(__file__).parent / "data" / "lint"
+REPO = Path(__file__).parent.parent
+
+
+def _run_cli(*argv: str) -> subprocess.CompletedProcess:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *argv],
+        cwd=REPO, env=env, capture_output=True, text=True)
+
+
+@pytest.mark.parametrize("rule", sorted(RULES))
+def test_golden_bad_snippet_is_caught(rule):
+    src = (DATA / f"{rule.lower()}_bad.py").read_text()
+    findings = lint_source(src, f"{rule.lower()}_bad.py")
+    assert any(f.check == rule for f in findings), \
+        f"{rule} missed its golden bad snippet: {findings}"
+    assert all(f.level == "error" for f in findings)
+
+
+@pytest.mark.parametrize("rule", sorted(RULES))
+def test_golden_good_snippet_is_clean(rule):
+    src = (DATA / f"{rule.lower()}_good.py").read_text()
+    assert [f for f in lint_source(src) if f.check == rule] == []
+
+
+def test_allowlist_comment_suppresses_named_rule():
+    findings = lint_source((DATA / "allowlist.py").read_text())
+    # every acknowledged violation is silenced; the one whose ignore names
+    # a different rule still fires.
+    assert len(findings) == 1
+    assert findings[0].check == "E2A002"
+    assert "wrong_rule" in findings[0].message
+
+
+def test_repo_tree_is_clean():
+    """The whole pass runs clean on the current tree — the ISSUE 7
+    acceptance bar. A new violation anywhere in src/benchmarks/examples
+    fails here (and in the CI analysis leg) with the rule's message."""
+    findings = lint_paths([REPO / "src", REPO / "benchmarks",
+                           REPO / "examples"])
+    assert findings == [], "\n".join(f.format() for f in findings)
+
+
+def test_golden_dir_is_excluded_from_tree_lint():
+    files = list(iter_py_files([REPO / "tests"]))
+    assert files, "tests/ should contain lintable files"
+    assert not [f for f in files if "data" in f.parts], \
+        "golden known-bad snippets must not be linted as repo code"
+
+
+def test_cli_exit_codes_and_rules_flag():
+    bad = _run_cli("--lint", "--paths", str(DATA / "e2a002_bad.py"))
+    assert bad.returncode == 1, bad.stdout + bad.stderr
+    assert "E2A002" in bad.stdout
+    good = _run_cli("--lint", "--paths", str(DATA / "e2a002_good.py"))
+    assert good.returncode == 0, good.stdout + good.stderr
+    rules = _run_cli("--rules")
+    assert rules.returncode == 0
+    for rule in RULES:
+        assert rule in rules.stdout
+
+
+def test_syntax_error_is_reported_not_raised(tmp_path):
+    f = tmp_path / "broken.py"
+    f.write_text("def oops(:\n")
+    findings = lint_paths([f])
+    assert len(findings) == 1 and findings[0].check == "lint.parse"
+    assert findings[0].level == "error"

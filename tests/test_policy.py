@@ -27,12 +27,19 @@ KEY = jax.random.PRNGKey(0)
 def test_policy_canonical_hash_eq():
     """Dict / unsorted-tuple spellings canonicalize to the same value —
     policies are static jit args, so equal policies must hash equal."""
-    a = ExecutionPolicy(backend="pallas", overrides={"b": "y", "a": "x"})
-    b = ExecutionPolicy(backend="pallas", overrides=(("b", "y"), ("a", "x")))
-    c = ExecutionPolicy(backend="pallas", overrides=(("a", "x"), ("b", "y")))
+    a = ExecutionPolicy(backend="pallas", overrides={"b": "y", "a": "x"},
+                        strict=False)
+    b = ExecutionPolicy(backend="pallas", overrides=(("b", "y"), ("a", "x")),
+                        strict=False)
+    c = ExecutionPolicy(backend="pallas", overrides=(("a", "x"), ("b", "y")),
+                        strict=False)
     assert a == b == c
     assert hash(a) == hash(b) == hash(c)
     assert a != ExecutionPolicy(backend="pallas")
+    # strict is a construction-time check, not an execution behavior: it
+    # must not split the jit cache.
+    assert a == ExecutionPolicy(backend="pallas",
+                                overrides={"a": "x", "b": "y"}, strict=False)
 
 
 def test_policy_is_frozen():
@@ -75,8 +82,10 @@ def test_policy_static_under_jit_no_retrace():
         return x + 1
 
     x = jnp.zeros(3)
-    f(x, ExecutionPolicy(backend="pallas", overrides={"a": "b"}))
-    f(x, ExecutionPolicy(backend="pallas", overrides=(("a", "b"),)))
+    f(x, ExecutionPolicy(backend="pallas", overrides={"a": "b"},
+                         strict=False))
+    f(x, ExecutionPolicy(backend="pallas", overrides=(("a", "b"),),
+                         strict=False))
     assert len(traces) == 1, "logically-equal policies must not retrace"
     f(x, ExecutionPolicy(backend="pallas"))
     assert len(traces) == 2
@@ -109,7 +118,8 @@ def test_third_party_impl_dispatches_per_site():
     try:
         params, state = init_linear_bn(KEY, 8, 8)
         x = jax.random.normal(KEY, (4, 8))
-        pol = ExecutionPolicy(overrides={"my.site": "test-spy"})
+        pol = ExecutionPolicy(overrides={"my.site": "test-spy"},
+                              strict=False)
         y_spy, _ = linear_bn_apply(params, state, x, train=True, policy=pol,
                                    site="my.site")
         y_ref, _ = linear_bn_apply(params, state, x, train=True,
@@ -124,7 +134,8 @@ def test_lif_scan_dispatches_through_registry():
     """Per-site override on lif: a pallas-backend policy with a jnp override
     at one site still produces identical spikes (and really dispatches)."""
     x = jax.random.normal(KEY, (3, 4, 16)) * 2
-    pol = ExecutionPolicy(backend="pallas", overrides={"quiet.lif": "jnp"})
+    pol = ExecutionPolicy(backend="pallas", overrides={"quiet.lif": "jnp"},
+                          strict=False)
     a = lif_scan(x, LIFConfig(policy=pol), site="quiet.lif")
     b = lif_scan(x, LIFConfig(policy=pol), site="loud.lif")
     assert jnp.array_equal(a, b)   # parity across impls (binary spikes)
@@ -282,15 +293,35 @@ def test_plan_rejects_unregistered_impl():
 
 
 def test_plan_rejects_typod_site_key():
-    """An override key matching no site and no op is a typo: it must fail
-    at validation time, not silently do nothing."""
-    pol = named_policy("pallas").with_sites(
-        {"pssa.kqv": "pallas+spike_mm"})   # typo of pssa.qkv
+    """An override key matching no site and no op is a typo: it now fails
+    at *construction* (against the registered site tables), and a
+    strict=False policy that dodges that still fails at plan time."""
+    with pytest.raises(ValueError, match="pssa.kqv"):
+        named_policy("pallas").with_sites(
+            {"pssa.kqv": "pallas+spike_mm"})   # typo of pssa.qkv
+    pol = dataclasses.replace(named_policy("pallas"), strict=False) \
+        .with_sites({"pssa.kqv": "pallas+spike_mm"})
     with pytest.raises(ValueError, match="pssa.kqv"):
         get_spikingformer_config("spikingformer-smoke", policy=pol)
     # op-name keys are always valid, even when no spec lists that op
     plan_sites(ExecutionPolicy(overrides={"attn_qk": "jnp"}),
                [("tokenizer.lif", "lif", None)])
+
+
+def test_construction_validates_against_site_tables():
+    """Override keys are checked against the union of registered site
+    tables at construction: real sites of any model pass (including group
+    prefixes and group-extension keys for deeper tokenizers), typos raise,
+    and strict=False is the forward-compat escape hatch."""
+    ExecutionPolicy(overrides={"tokenizer.conv": "pallas",
+                               "lm.ffn.lif": "jnp",
+                               "tokenizer.conv.9": "jnp"})
+    with pytest.raises(ValueError, match="tokenizer.cnv"):
+        ExecutionPolicy(overrides={"tokenizer.cnv": "pallas"})
+    fwd = ExecutionPolicy(overrides={"future.model.site": "x"}, strict=False)
+    # derived policies keep the escape hatch
+    assert fwd.with_sites({"another.future.site": "y"}).strict is False
+    assert policy_from_flags("pallas", base=fwd).strict is False
 
 
 def test_plan_excludes_attn_sites_when_kv_first():
