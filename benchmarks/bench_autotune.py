@@ -1,0 +1,169 @@
+"""Site-level autotuner bench: oracle-vs-measured sweep + the BENCH.json
+``energy`` section (docs/AUTOTUNE.md).
+
+Two entry points:
+
+* :func:`energy_section` — the deterministic per-site energy/latency
+  table ``benchmarks/run.py`` embeds as the ``energy`` section of
+  BENCH.json. It is *analytic*: plan-generated workloads
+  (``repro.tune.workloads``), one seeded instrumented forward for
+  measured sparsity, the paper's §IV-V cost model for energy/cycles, and
+  the oracle's top candidate for the block columns. No wall-clock numbers
+  — every value is drift-comparable across runs on any machine.
+* :func:`run` / CLI — the full autotune: oracle ranking plus the timed
+  top-K sweep, persisting the winners as a versioned tuned-block table
+  (``--out``) and an oracle-vs-measured report (``--json``). Timings are
+  machine-dependent by nature, so they live in this script's own artifact
+  and are never drift-gated.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+from pathlib import Path
+
+_ROOT = Path(__file__).resolve().parent.parent
+for p in (str(_ROOT), str(_ROOT / "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+#: The config every CI/smoke invocation tunes: the CPU-sized model on the
+#: all-Pallas policy (the jnp policy has no tunable block knobs).
+SMOKE_CONFIG = "spikingformer-smoke@pallas-full"
+
+
+def _cfg(name: str = SMOKE_CONFIG):
+    from repro.configs.spikingformer import get_spikingformer_config
+
+    return get_spikingformer_config(name)
+
+
+def energy_section(smoke: bool = True, batch: int = 1,
+                   seed: int = 0) -> list[str]:
+    """Deterministic per-site energy/latency rows for BENCH.json.
+
+    Uses the smoke config regardless of ``smoke`` (the probe forward must
+    stay CI-sized); ``smoke`` is accepted for signature parity with the
+    other sections.
+    """
+    from repro.core.energy.constants import DEFAULT_ARRAY
+    from repro.core.energy.dataflow import best_dataflow
+    from repro.core.energy.energy_model import elem_cost, mm_cost
+    from repro.tune.oracle import oracle_rank
+    from repro.tune.sparsity import measure_sparsity
+    from repro.tune.workloads import site_workloads, training_mms
+
+    cfg = _cfg()
+    report = measure_sparsity(cfg, batch=max(batch, 2), seed=seed)
+    wls = site_workloads(cfg, batch, report.site_sparsity())
+
+    lines = ["site,op,impl,shape,packing,dataflow,in_sparsity,energy_uj,"
+             "latency_cycles,block_m,block_k,block_c,arm"]
+    total_j = total_cycles = 0.0
+    for wl in wls:
+        mms = training_mms(wl)
+        df = best_dataflow(mms) if mms else None
+        costs = [mm_cost(m, df, arr=DEFAULT_ARRAY) for m in mms]
+        costs += [elem_cost(e) for e in wl.elems]
+        if not costs:
+            continue
+        energy = sum(c.total_j for c in costs)
+        cycles = sum(c.cycles for c in costs)
+        total_j += energy
+        total_cycles += cycles
+        top = oracle_rank(wl)[:1]
+        tb = top[0] if top else None
+        lines.append(
+            f"{wl.site},{wl.op},{wl.impl},"
+            f"{'x'.join(map(str, wl.shape))},"
+            f"{'packed' if wl.packed else 'dense'},"
+            f"{df.name if df else '-'},"
+            f"{wl.mm.in_sparsity if wl.mm else 0.0:.4f},"
+            f"{energy * 1e6:.3f},{cycles:.0f},"
+            f"{tb.block_m if tb and tb.block_m is not None else '-'},"
+            f"{tb.block_k if tb else '-'},{tb.block_c if tb else '-'},"
+            f"{tb.arm if tb and tb.arm else '-'}")
+    agg = report.aggregate()
+    lines += ["", "aggregate,value",
+              f"s_s_measured,{agg.s_s:.4f}",
+              f"s_smg_measured,{agg.s_smg:.4f}",
+              f"s_pg_default,{agg.s_pg:.4f}",
+              f"total_energy_uj,{total_j * 1e6:.3f}",
+              f"total_latency_cycles,{total_cycles:.0f}"]
+    return lines
+
+
+def run(smoke: bool = True, batch: int = 1, out: str | None = None,
+        top_k: int = 3, reps: int = 3) -> tuple[list[str], dict]:
+    """Full autotune sweep: oracle-vs-measured CSV + report dict."""
+    from repro.tune.autotune import tune, tune_and_save
+
+    cfg = _cfg()
+    if out:
+        rep = tune_and_save(cfg, out, batch=batch, smoke=smoke,
+                            top_k=top_k, reps=reps)
+    else:
+        rep = tune(cfg, batch=batch, smoke=smoke, top_k=top_k, reps=reps)
+
+    lines = ["site,impl,shape,candidates,oracle_top_cycles,winner_blocks,"
+             "winner_us,winner_in_top1"]
+    doc = {"device_kind": rep.device_kind, "entries": {}, "results": []}
+    for res in rep.results:
+        wl = res.workload
+        w = res.winner
+        blocks = (f"{w.block_m if w.block_m is not None else '-'}/"
+                  f"{w.block_k}/{w.block_c}"
+                  + (f"/{w.arm}" if w.arm else "")) if w else "-"
+        us = f"{res.winner_us:.1f}" if res.winner_us is not None else "-"
+        lines.append(
+            f"{wl.site},{wl.impl},{'x'.join(map(str, wl.shape))},"
+            f"{len(res.ranked)},{res.ranked[0].cycles:.0f},{blocks},{us},"
+            f"{res.winner_in_top1}")
+        doc["results"].append({
+            "site": wl.site, "impl": wl.impl, "shape": list(wl.shape),
+            "candidates": len(res.ranked),
+            "timed": [{"blocks": [c.block_m, c.block_k, c.block_c, c.arm],
+                       "oracle_cycles": c.cycles, "us": round(us, 3)}
+                      for c, us in res.timed],
+            "winner_in_top1": res.winner_in_top1,
+        })
+    for key, tb in rep.entries.items():
+        doc["entries"][key] = {k: v for k, v in
+                               dataclasses.asdict(tb).items()
+                               if v is not None}
+    in_top1 = [r.winner_in_top1 for r in rep.results
+               if r.winner_in_top1 is not None]
+    if in_top1:
+        lines.append(f"# oracle_top1_hit_rate="
+                     f"{sum(in_top1) / len(in_top1):.2f} "
+                     f"({sum(in_top1)}/{len(in_top1)} sites)")
+    return lines, doc
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="2-candidate single-rep sweep (CI autotune-smoke)")
+    ap.add_argument("--batch", type=int, default=1)
+    ap.add_argument("--out", metavar="PATH", default=None,
+                    help="write the tuned-block table JSON here")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write the oracle-vs-measured report here")
+    ap.add_argument("--top-k", type=int, default=3)
+    ap.add_argument("--reps", type=int, default=3)
+    args = ap.parse_args()
+    lines, doc = run(smoke=args.smoke, batch=args.batch, out=args.out,
+                     top_k=args.top_k, reps=args.reps)
+    print("\n".join(lines))
+    if args.json:
+        Path(args.json).write_text(json.dumps(doc, indent=1, sort_keys=True)
+                                   + "\n")
+        print(f"wrote {args.json}")
+    if args.out:
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

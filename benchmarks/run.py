@@ -7,6 +7,8 @@ Prints ``name,value,...`` CSV blocks:
   table9   - headline metrics vs paper + SOTA            (Table IX)
   kernels  - Pallas kernel micro-benches                 (interpret mode)
   serving  - continuous-batching Poisson-trace replay    (docs/SERVING.md)
+  energy   - per-site analytic energy/latency with measured sparsity and
+             oracle block picks (docs/AUTOTUNE.md; fully deterministic)
 
 ``--smoke`` (used by CI) shrinks the kernel shapes and rep counts so the
 whole sweep finishes in well under a minute on a laptop-class CPU.
@@ -83,9 +85,9 @@ def main() -> None:
                     help="also write section->metric->value JSON to PATH")
     args = ap.parse_args()
 
-    from benchmarks import (bench_comparison, bench_dataflows,
-                            bench_energy_breakdown, bench_kernels,
-                            bench_model_table, bench_serving)
+    from benchmarks import (bench_autotune, bench_comparison,
+                            bench_dataflows, bench_energy_breakdown,
+                            bench_kernels, bench_model_table, bench_serving)
     sections = [
         ("table1", lambda: bench_model_table.run(smoke=args.smoke)),
         ("fig9_10", bench_dataflows.run),
@@ -93,6 +95,7 @@ def main() -> None:
         ("table9", bench_comparison.run),
         ("kernels", lambda: bench_kernels.run(smoke=args.smoke)),
         ("serving", lambda: bench_serving.run(smoke=args.smoke)),
+        ("energy", lambda: bench_autotune.energy_section(smoke=args.smoke)),
     ]
     report = {"smoke": args.smoke, "generated_unix": int(time.time()),
               "sections": {}}

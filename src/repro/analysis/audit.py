@@ -24,7 +24,13 @@ reports:
   ``cache_batch_axes`` and ``reset_cache_slots`` (``audit.serving.cache``)
   — errors, checked shape-only via ``jax.eval_shape`` (no allocation);
 * ``describe_execution(mesh)`` failures on a small set of mesh shapes
-  (``audit.mesh.describe``) — errors.
+  (``audit.mesh.describe``) — errors;
+* tuned-block table entries (``audit.tune.table``) whose keys are
+  malformed, name sites no model registers, carry ops/impls the kernel
+  registry does not know (or that have no block knobs), or whose packed
+  shape violates the %8 packing contract — errors: a stale or mistyped
+  entry would silently never be consulted (or worse, consulted with
+  blocks tuned for a different kernel).
 
 Everything returns :class:`repro.analysis.report.Finding` rows; the CLI
 (``python -m repro.analysis --audit``) turns errors into a non-zero exit.
@@ -36,7 +42,8 @@ from typing import Iterable, Mapping, Sequence
 from repro.analysis.report import Finding, error, info, warning
 
 __all__ = ["audit_mesh_plans", "audit_serving_caches",
-           "audit_spikingformer_plans", "fused_site_geometries", "run_audit"]
+           "audit_spikingformer_plans", "audit_tuned_table",
+           "fused_site_geometries", "run_audit"]
 
 #: Arch families whose decode path has no slot cache contract (the audio
 #: encoder-decoder serves through a different entry point).
@@ -228,6 +235,86 @@ def audit_serving_caches(arch_names: Sequence[str] | None = None, *,
 
 
 # ---------------------------------------------------------------------------
+# Tuned-block table audit: key validation against the kernel registry
+# ---------------------------------------------------------------------------
+
+def audit_tuned_table(path: str | None = None) -> list[Finding]:
+    """Validate a tuned-block table (``repro.tune.table``) key by key.
+
+    ``path=None`` audits the active table (``$REPRO_TUNED_BLOCKS`` or the
+    repo default); no active table is an info, not an error — tuned blocks
+    are an optional acceleration layer. Every entry must name a site the
+    site-key registry knows, a registered ``(op, impl)`` that actually has
+    block knobs (``repro.tune.workloads.TUNABLE_IMPLS``), a well-formed
+    shape, a valid arm, and — when marked packed — a contraction dim
+    honouring the %8 packing contract. Version mismatches are errors here
+    (dispatch merely ignores such tables, but an audited artifact claiming
+    to be a tuned table must actually load).
+    """
+    import json as _json
+    import pathlib
+
+    from repro.core.policy import OPS, available_impls, known_site_keys
+    from repro.tune.table import (ARMS, TABLE_VERSION, parse_key,
+                                  table_path)
+    from repro.tune.workloads import TUNABLE_IMPLS
+
+    findings: list[Finding] = []
+    p = pathlib.Path(path) if path is not None else table_path()
+    if p is None:
+        return [info("audit.tune.table", "-",
+                     "no tuned-block table active; kernel defaults apply")]
+    try:
+        raw = _json.loads(p.read_text())
+    except (OSError, _json.JSONDecodeError) as e:
+        return [error("audit.tune.table", str(p), f"unreadable table: {e}")]
+    if raw.get("version") != TABLE_VERSION:
+        return [error("audit.tune.table", str(p),
+                      f"version {raw.get('version')!r} unsupported "
+                      f"(expected {TABLE_VERSION}); dispatch would ignore "
+                      f"this table entirely")]
+    sites = known_site_keys()
+    bad = 0
+    for key, entry in sorted(raw.get("entries", {}).items()):
+        where = f"{p.name}/{key}"
+        try:
+            _, site, op, impl, shape, packed = parse_key(key)
+        except ValueError as e:
+            findings.append(error("audit.tune.table", where, str(e)))
+            bad += 1
+            continue
+        problems = []
+        if site not in sites:
+            problems.append(f"unknown site {site!r} (stale key?)")
+        if op not in OPS:
+            problems.append(f"unknown op {op!r}")
+        elif impl not in available_impls(op):
+            problems.append(f"impl {impl!r} not registered for op {op!r}")
+        elif (op, impl) not in TUNABLE_IMPLS:
+            problems.append(f"({op}, {impl}) has no block knobs — entry "
+                            f"can never be consulted")
+        if not shape or any(d <= 0 for d in shape):
+            problems.append(f"malformed shape {shape}")
+        elif packed and len(shape) >= 2 and shape[-2] % 8 != 0:
+            problems.append(f"packed entry but contraction dim "
+                            f"{shape[-2]} % 8 != 0")
+        arm = entry.get("arm")
+        if arm is not None and arm not in ARMS:
+            problems.append(f"unknown arm {arm!r}")
+        for name in ("block_m", "block_k", "block_c"):
+            v = entry.get(name)
+            if v is not None and (not isinstance(v, int) or v <= 0):
+                problems.append(f"{name}={v!r} is not a positive int")
+        for msg in problems:
+            findings.append(error("audit.tune.table", where, msg))
+        bad += bool(problems)
+    n = len(raw.get("entries", {}))
+    findings.append(info("audit.tune.table", str(p),
+                         f"{n} entries, {bad} invalid"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
 # Mesh audit: describe_execution on a small set of mesh shapes
 # ---------------------------------------------------------------------------
 
@@ -279,7 +366,9 @@ def run_audit(*, batch: int = 1,
               presets: Sequence[str] | None = None,
               policies: Mapping[str, object] | None = None,
               arch_names: Sequence[str] | None = None) -> list[Finding]:
-    """The full static audit (plans + serving caches + mesh renders)."""
+    """The full static audit (plans + serving caches + tuned table +
+    mesh renders)."""
     return (audit_spikingformer_plans(presets, policies, batch=batch)
             + audit_serving_caches(arch_names)
+            + audit_tuned_table()
             + audit_mesh_plans(presets))

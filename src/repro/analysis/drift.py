@@ -24,9 +24,12 @@ from repro.analysis.report import Finding, error, info, warning
 
 __all__ = ["bench_drift", "load_report"]
 
-#: Metric-name fragments that measure wall-clock, not behavior.
+#: Metric-name fragments that measure wall-clock, not behavior. (The
+#: analytic ``latency_cycles`` of the energy section is NOT timing — it is
+#: a deterministic model output and *should* drift-compare.)
 _TIMING_RE = re.compile(
-    r"seconds|_per_sec|latency_s\b|generated_unix|^_section")
+    r"seconds|_per_sec|latency_s\b|generated_unix|^_section"
+    r"|us_per_call|_us\b|_ms\b|\bus_per_sim\b")
 
 
 def load_report(path: str | Path) -> dict:

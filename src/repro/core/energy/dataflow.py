@@ -19,11 +19,43 @@ count of an MM is max(compute cycles, DRAM stream cycles, SRAM stream cycles).
 from __future__ import annotations
 
 import dataclasses
+import logging
 import math
 from enum import Enum
 
 from repro.core.energy.constants import ArrayConfig, DEFAULT_ARRAY
 from repro.core.energy.workload import MMOp
+
+logger = logging.getLogger(__name__)
+
+#: Degenerate shapes already warned about (once per distinct shape, not per
+#: call — ``best_dataflow`` scores nine dataflows over the same op list).
+_WARNED_DEGENERATE: set[tuple[str, int, int, int, int]] = set()
+
+
+def _sanitized(mm: MMOp) -> MMOp:
+    """Clamp degenerate MM dims so the eq. 26-28 model stays well-defined.
+
+    Shapes with a zero/negative dim (or count) would make ``compute_cycles``
+    return 0, ``utilization`` divide by zero, and ``mm_latency_cycles`` rank
+    the op as free — a nonsense ordering in ``best_dataflow``. Such shapes
+    carry no real work, so clamp every dim to >= 1 (one element still costs a
+    wavefront fill) and say so once per shape at WARNING level.
+    """
+    dims = (mm.B, mm.C, mm.K, mm.count)
+    if min(dims) >= 1:
+        return mm
+    key = (mm.name, *dims)
+    if key not in _WARNED_DEGENERATE:
+        _WARNED_DEGENERATE.add(key)
+        logger.warning(
+            "degenerate MM shape for %r: B=%d C=%d K=%d count=%d; clamping "
+            "dims to >= 1 so cycle counts stay positive and utilization "
+            "bounded (eq. 26-28 assume at least one element per dim)",
+            mm.name, mm.B, mm.C, mm.K, mm.count)
+    return dataclasses.replace(
+        mm, B=max(1, mm.B), C=max(1, mm.C), K=max(1, mm.K),
+        count=max(1, mm.count))
 
 
 class Inner(str, Enum):
@@ -79,6 +111,7 @@ def _tiles(mm: MMOp, arr: ArrayConfig) -> tuple[int, int, int]:
 
 def compute_cycles(mm: MMOp, df: Dataflow, arr: ArrayConfig) -> float:
     """eq. 27: (2 D_row + D_col + T - 2) x (stationary tile count)."""
+    mm = _sanitized(mm)
     n_b, n_c, n_k = _tiles(mm, arr)
     if arr.fill_overlap == "drain":
         fill = arr.rows + arr.cols - 2
@@ -94,9 +127,16 @@ def compute_cycles(mm: MMOp, df: Dataflow, arr: ArrayConfig) -> float:
 
 
 def utilization(mm: MMOp, df: Dataflow, arr: ArrayConfig) -> float:
-    """eq. 28."""
+    """eq. 28, clamped into (0, 1].
+
+    Shapes smaller than one array tile still pay a full wavefront fill, so
+    the raw ratio is already < 1 there; the clamp guards the opposite edge
+    (a count/dim clamp in :func:`_sanitized` raising ``macs`` past ``t``)
+    and rounding noise.
+    """
+    mm = _sanitized(mm)
     t = compute_cycles(mm, df, arr)
-    return mm.macs / (t * arr.rows * arr.cols)
+    return min(1.0, mm.macs / (t * arr.rows * arr.cols))
 
 
 def _outer_chunks(mm: MMOp, df: Dataflow, arr: ArrayConfig) -> int:
@@ -137,6 +177,7 @@ def mm_traffic(mm: MMOp, df: Dataflow, arr: ArrayConfig) -> Traffic:
     Registers: one read per operand and one write per result per MAC; spike
     operands gate the MAC, so register traffic scales by (1 - sparsity).
     """
+    mm = _sanitized(mm)
     n_b, n_c, n_k = _tiles(mm, arr)
     cnt = mm.count
     in_bits = mm.B * mm.C * mm.in_bits * cnt

@@ -35,6 +35,7 @@ from repro.core.policy import (ExecutionPolicy, FUSED_EPILOGUE_IMPLS,
                                policy_from_flags, register_kernel,
                                runtime_fallback)
 from repro.models.common import BATCH, MODEL, shard
+from repro.tune.table import lookup as tuned_lookup
 
 Params = dict[str, Any]
 State = dict[str, Any]
@@ -188,7 +189,10 @@ def _linear_bn_spike_mm(params, state, x, train, policy, site):
         from repro.kernels import ops
 
         x2, shape = fold_rows(x)
-        y = ops.spike_matmul_train_op(x2, w.astype(x.dtype), policy.interpret)
+        tb = tuned_lookup(site, "linear_bn", "pallas+spike_mm",
+                          (x2.shape[0], x2.shape[1], w.shape[-1]), True)
+        y = ops.spike_matmul_train_op(x2, w.astype(x.dtype), policy.interpret,
+                                      tb.mm_blocks() if tb else None)
         y = y.reshape(*shape[:-1], w.shape[-1])
     else:
         runtime_fallback(site, "pallas+spike_mm",
@@ -225,13 +229,32 @@ def _train_arm_exceeds_vmem(x, k_out, packed, policy, site) -> bool:
     return True
 
 
+def _tuned_prefers_pipeline(site, op, impl, shape, packed, policy) -> bool:
+    """True when the active tuned-block table *measured* the M-tiled
+    pipeline arm as faster than the single-launch megakernel at this site.
+    An exact site-level policy override pinning a fused impl wins over the
+    table (explicit policy beats measurement); the demotion is logged as an
+    expected, planned decision — like the VMEM capacity guard."""
+    tb = tuned_lookup(site, op, impl, shape, packed)
+    if tb is None or tb.arm != "pipeline":
+        return False
+    if dict(policy.overrides).get(site) in FUSED_EPILOGUE_IMPLS:
+        return False
+    runtime_fallback(site, impl,
+                     "tuned table prefers the pipeline arm -> "
+                     f"{fused_epilogue_fallback(op, impl)}", expected=True)
+    return True
+
+
 def _neuron_layer_site(x3, w_mat, bn_p, bn_s, lif_cfg, train, packed,
-                       interpret):
+                       interpret, tuned=None):
     """Shared fused-epilogue core: ``x3 (T, M, C) @ w_mat (C, K)`` + BN +
     SOMA in ONE Pallas launch (``kernels/neuron_layer.py``). Train mode
     computes the batch statistics in-kernel and blends the running stats
     (momentum 0.9, like ``_bn_pallas``); eval folds BN into the weights and
-    a bias RTFormer-style. Returns ``(spikes (T, M, K), new_bn_state)``."""
+    a bias RTFormer-style. ``tuned`` is the site's
+    :class:`repro.tune.table.TunedBlocks` entry (or None for kernel
+    defaults). Returns ``(spikes (T, M, K), new_bn_state)``."""
     from repro.kernels import conv_spike, ops  # deferred: jnp path stays light
 
     lif = lif_cfg
@@ -239,15 +262,21 @@ def _neuron_layer_site(x3, w_mat, bn_p, bn_s, lif_cfg, train, packed,
         spikes, mu, var = ops.neuron_layer_train_op(
             x3, w_mat.astype(x3.dtype), bn_p["gamma"], bn_p["beta"],
             lif.alpha, lif.th_fire, lif.th_lo, lif.th_hi, lif.grad_scale,
-            1e-5, packed, interpret)
+            1e-5, packed, interpret,
+            tuned.train_blocks() if tuned is not None else None)
         new_bn = {"mean": 0.9 * bn_s["mean"] + 0.1 * mu,
                   "var": 0.9 * bn_s["var"] + 0.1 * var}
         return spikes, new_bn
     w_fold, bias = conv_spike.fold_bn(w_mat, bn_p["gamma"], bn_p["beta"],
                                       bn_s["mean"], bn_s["var"])
+    # The tuned entry is measured on the train arm; its (block_k, block_c)
+    # transfer to eval (same K/C axes), block_m stays a kernel default
+    # unless the entry carries one.
+    eval_blocks = ((tuned.block_m, tuned.block_k, tuned.block_c)
+                   if tuned is not None else None)
     spikes = ops.neuron_layer_eval_op(
         x3, w_fold.astype(x3.dtype), bias, lif.alpha, lif.th_fire, lif.th_lo,
-        lif.th_hi, lif.grad_scale, packed, interpret)
+        lif.th_hi, lif.grad_scale, packed, interpret, eval_blocks)
     return spikes, bn_s
 
 
@@ -271,9 +300,11 @@ def _linear_bn_fused_epilogue(params, state, x, lif_cfg, train, policy, site):
                          f"contraction dim {x3.shape[-1]} % 8 != 0 -> "
                          f"dense arm (still fused)")
     w = params["linear"]["w"]
+    tb = tuned_lookup(site, "linear_bn", "fused_epilogue",
+                      x3.shape + (w.shape[-1],), packed)
     spikes, bn_s = _neuron_layer_site(x3, w, params["bn"], state["bn"],
                                       lif_cfg, train, packed,
-                                      policy.interpret)
+                                      policy.interpret, tb)
     return spikes.reshape(*shape[:-1], w.shape[-1]), {"bn": bn_s}
 
 
@@ -334,6 +365,12 @@ def linear_bn_lif_apply(params: Params, state: State, x: jax.Array,
             _train_arm_exceeds_vmem(x, params["linear"]["w"].shape[-1],
                                     x.shape[-1] % 8 == 0, policy, site):
         impl = fused_epilogue_fallback("linear_bn", impl)
+    if impl in FUSED_EPILOGUE_IMPLS and train:
+        x3shape = (x.shape[0], math.prod(x.shape[1:-1]), x.shape[-1],
+                   params["linear"]["w"].shape[-1])
+        if _tuned_prefers_pipeline(site, "linear_bn", impl, x3shape,
+                                   x.shape[-1] % 8 == 0, policy):
+            impl = fused_epilogue_fallback("linear_bn", impl)
     if impl in FUSED_EPILOGUE_IMPLS:
         spikes, st = get_kernel("linear_bn", impl)(params, state, x, lif_cfg,
                                                    train, policy, site)
@@ -373,9 +410,12 @@ def _attn_qk_packed(q, k, policy, site):
         return _attn_qk_jnp(q, k, policy, site)
     from repro.kernels import ops
 
+    tb = tuned_lookup(site, "attn_qk", "pallas_packed",
+                      (t * b * h, n, dh, m), True)
     out = ops.spike_bmm_train_op(q.reshape(t * b * h, n, dh),
                                  k.reshape(t * b * h, m, dh).transpose(0, 2, 1),
-                                 policy.interpret)
+                                 policy.interpret,
+                                 tb.mm_blocks() if tb else None)
     return out.reshape(t, b, h, n, m)
 
 
@@ -404,7 +444,10 @@ def _attn_av_packed(attn, v, policy, site):
 
     vt = v.reshape(t * b * h, m, dh).transpose(0, 2, 1)       # (G, dh, M) {0,1}
     at = attn.reshape(t * b * h, n, m).transpose(0, 2, 1)     # (G, M, N)
-    out_t = ops.spike_bmm_train_op(vt, at, policy.interpret)  # (G, dh, N)
+    tb = tuned_lookup(site, "attn_av", "pallas_packed",
+                      (t * b * h, dh, m, n), True)
+    out_t = ops.spike_bmm_train_op(vt, at, policy.interpret,
+                                   tb.mm_blocks() if tb else None)  # (G,dh,N)
     return out_t.transpose(0, 2, 1).reshape(t, b, h, n, dh)
 
 

@@ -225,11 +225,18 @@ class SpikingFormerConfig:
 
     def describe_execution(self, mesh=None) -> str:
         """The per-site dispatch table (printed by bench_model_table),
-        followed by the sharding plan: the activation partition specs the
-        model constrains to, and — when ``mesh`` is given — the effective
-        parameter shardings (post sanitize + FSDP) on that mesh."""
-        out = self.policy.describe(rows=self.execution_plan())
-        return out + "\n\n" + self.describe_sharding(mesh)
+        followed by the active tuned-block table's entries for this model's
+        sites (``repro.tune`` — which block sizes/arms kernel dispatch will
+        pick up at trace time), then the sharding plan: the activation
+        partition specs the model constrains to, and — when ``mesh`` is
+        given — the effective parameter shardings (post sanitize + FSDP)
+        on that mesh."""
+        from repro.tune.table import describe_tuned
+
+        rows = self.execution_plan()
+        out = self.policy.describe(rows=rows)
+        tuned = describe_tuned([r.site for r in rows])
+        return out + "\n\n" + tuned + "\n\n" + self.describe_sharding(mesh)
 
     def describe_sharding(self, mesh=None) -> str:
         """The sharding half of the execution report (see docs/SHARDING.md).
@@ -484,8 +491,13 @@ def conv_bn_lif_fused(params, state, x, lif_cfg, train, spike_in, policy,
 
     def matmul(weights):
         if use_packed:
+            from repro.tune.table import lookup as tuned_lookup
+
+            tb = tuned_lookup(site, "conv", "pallas_packed",
+                              (t, patches.shape[1], cdim, k_out), True)
             return ops.spike_patch_mm_train_op(
-                patches, weights.astype(patches.dtype), policy.interpret)
+                patches, weights.astype(patches.dtype), policy.interpret,
+                tb.mm_blocks() if tb else None)
         return jnp.einsum("tmc,ck->tmk", patches,
                           weights.astype(patches.dtype))
 
@@ -534,14 +546,20 @@ def _conv_stage_megakernel(params, state, x, lif_cfg, train, spike_in,
     nor ``tokenizer.lif`` dispatches, and no pre-activation crosses HBM —
     3 launches -> 1 per stage.
     """
-    from repro.core.spiking_layers import _train_arm_exceeds_vmem
+    from repro.core.spiking_layers import (_train_arm_exceeds_vmem,
+                                           _tuned_prefers_pipeline)
+    from repro.tune.table import lookup as tuned_lookup
 
     patches, w_mat, (t, b, ho, wo, cdim) = _im2col_patches(params, x)
     packed = spike_in and cdim % 8 == 0
-    if train and _train_arm_exceeds_vmem(patches, w_mat.shape[-1], packed,
-                                         policy, site):
-        # Capacity demotion on a compiling backend: the pipeline arm of the
-        # same fused conv (M-tiled matmul + fused BN + SOMA epilogue).
+    shape4 = (t, patches.shape[1], cdim, w_mat.shape[-1])
+    if train and (_train_arm_exceeds_vmem(patches, w_mat.shape[-1], packed,
+                                          policy, site)
+                  or _tuned_prefers_pipeline(site, "conv", "fused_epilogue",
+                                             shape4, packed, policy)):
+        # Demotion on a compiling backend — VMEM capacity estimate or a
+        # measured tuned-table verdict: the pipeline arm of the same fused
+        # conv (M-tiled matmul + fused BN + SOMA epilogue).
         return conv_bn_lif_fused(params, state, x, lif_cfg, train, spike_in,
                                  policy, site, packed=packed)
     if not packed:
@@ -552,9 +570,10 @@ def _conv_stage_megakernel(params, state, x, lif_cfg, train, spike_in,
         runtime_fallback(site, "fused_epilogue",
                          reason + " -> dense arm (still fused)",
                          expected=not spike_in)
+    tb = tuned_lookup(site, "conv", "fused_epilogue", shape4, packed)
     spikes, bn_s = _neuron_layer_site(patches, w_mat, params["bn"],
                                       state["bn"], lif_cfg, train, packed,
-                                      policy.interpret)
+                                      policy.interpret, tb)
     return spikes.reshape(t, b, ho, wo, w_mat.shape[-1]), {"bn": bn_s}
 
 

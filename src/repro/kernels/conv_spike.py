@@ -90,6 +90,9 @@ def fold_bn(w_mat: jax.Array, gamma: jax.Array, beta: jax.Array,
 
 
 def spike_patch_matmul(patches: jax.Array, w: jax.Array, *,
+                       block_m: int | None = None,
+                       block_k: int | None = None,
+                       block_c: int | None = None,
                        interpret: bool | None = None) -> jax.Array:
     """Bit-packed spike-conv matmul: (T, M, C) {0,1} x (C, K) -> (T, M, K).
 
@@ -102,5 +105,7 @@ def spike_patch_matmul(patches: jax.Array, w: jax.Array, *,
     """
     t = patches.shape[0]
     wb = jnp.broadcast_to(w[None], (t,) + w.shape)
+    blocks = {k: v for k, v in (("block_m", block_m), ("block_k", block_k),
+                                ("block_c", block_c)) if v is not None}
     return spike_matmul_packed_batched(spike_pack(patches), wb,
-                                       interpret=interpret)
+                                       interpret=interpret, **blocks)

@@ -19,6 +19,14 @@ from repro.kernels import conv_spike, fused_bn, lif_soma, neuron_layer, \
     spike_matmul
 
 
+def _block_kwargs(blocks, names):
+    """Expand a hashable tuned-block tuple (``repro.tune``) into kernel
+    kwargs; ``None`` (no tuned entry) keeps the kernel defaults."""
+    if blocks is None:
+        return {}
+    return {n: b for n, b in zip(names, blocks) if b is not None}
+
+
 @partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5, 6))
 def lif_soma_op(x: jax.Array, alpha: float = 0.5, th_fire: float = 1.0,
                 th_lo: float = 0.0, th_hi: float = 2.0,
@@ -153,28 +161,32 @@ def _bn_bwd(eps, interpret, res, g):
 bn_train_op.defvjp(_bn_fwd, _bn_bwd)
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(2,))
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3))
 def spike_matmul_train_op(spikes: jax.Array, w: jax.Array,
-                          interpret: bool | None = None) -> jax.Array:
+                          interpret: bool | None = None,
+                          blocks: tuple | None = None) -> jax.Array:
     """Differentiable bit-packed spike matmul: (M, C) {0,1} x (C, K).
 
     FP packs the spikes to 1 bit/element and runs the Pallas MXU kernel (16x
     less HBM input traffic than bf16); BP is the dense matmul VJP — the WG
     stage needs the real spike values (dW = S^T g), and dS = g W^T feeds the
     upstream LIF surrogate exactly as in the dense path. C must be a multiple
-    of 8 (packing granularity).
+    of 8 (packing granularity). ``blocks`` is an optional hashable
+    ``(block_m, block_k, block_c)`` tuned-block tuple (``repro.tune``).
     """
-    return spike_matmul.spike_matmul(spikes, w,
-                                     interpret=interpret)
+    return spike_matmul.spike_matmul(
+        spikes, w, interpret=interpret,
+        **_block_kwargs(blocks, ("block_m", "block_k", "block_c")))
 
 
-def _smm_fwd(spikes, w, interpret):
-    out = spike_matmul.spike_matmul(spikes, w,
-                                    interpret=interpret)
+def _smm_fwd(spikes, w, interpret, blocks):
+    out = spike_matmul.spike_matmul(
+        spikes, w, interpret=interpret,
+        **_block_kwargs(blocks, ("block_m", "block_k", "block_c")))
     return out, (spikes, w)
 
 
-def _smm_bwd(interpret, res, g):
+def _smm_bwd(interpret, blocks, res, g):
     spikes, w = res
     d_spikes = (g @ w.T.astype(g.dtype)).astype(spikes.dtype)
     d_w = (spikes.astype(g.dtype).T @ g).astype(w.dtype)
@@ -184,9 +196,10 @@ def _smm_bwd(interpret, res, g):
 spike_matmul_train_op.defvjp(_smm_fwd, _smm_bwd)
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(2,))
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3))
 def spike_bmm_train_op(spikes: jax.Array, w: jax.Array,
-                       interpret: bool | None = None) -> jax.Array:
+                       interpret: bool | None = None,
+                       blocks: tuple | None = None) -> jax.Array:
     """Differentiable batched bit-packed spike matmul:
     (G, M, C) {0,1} x (G, C, K) -> (G, M, K).
 
@@ -194,19 +207,22 @@ def spike_bmm_train_op(spikes: jax.Array, w: jax.Array,
     PSSA attention path ((T, B, heads) folds to the batch axis G). FP packs
     the spike operand to 1 bit/element and runs the batched Pallas kernel;
     BP is the dense batched-matmul VJP, so gradients match the ``jnp.einsum``
-    attention path exactly. C must be a multiple of 8.
+    attention path exactly. C must be a multiple of 8. ``blocks`` as in
+    :func:`spike_matmul_train_op`.
     """
     return spike_matmul.spike_matmul_batched(
-        spikes, w, interpret=interpret)
+        spikes, w, interpret=interpret,
+        **_block_kwargs(blocks, ("block_m", "block_k", "block_c")))
 
 
-def _sbmm_fwd(spikes, w, interpret):
+def _sbmm_fwd(spikes, w, interpret, blocks):
     out = spike_matmul.spike_matmul_batched(
-        spikes, w, interpret=interpret)
+        spikes, w, interpret=interpret,
+        **_block_kwargs(blocks, ("block_m", "block_k", "block_c")))
     return out, (spikes, w)
 
 
-def _sbmm_bwd(interpret, res, g):
+def _sbmm_bwd(interpret, blocks, res, g):
     spikes, w = res
     d_spikes = jnp.einsum("gmk,gck->gmc", g,
                           w.astype(g.dtype)).astype(spikes.dtype)
@@ -218,9 +234,10 @@ def _sbmm_bwd(interpret, res, g):
 spike_bmm_train_op.defvjp(_sbmm_fwd, _sbmm_bwd)
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(2,))
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3))
 def spike_patch_mm_train_op(patches: jax.Array, w: jax.Array,
-                            interpret: bool | None = None) -> jax.Array:
+                            interpret: bool | None = None,
+                            blocks: tuple | None = None) -> jax.Array:
     """Differentiable time-major im2col spike-conv matmul:
     (T, M, C) {0,1} patches x (C, K) shared weight -> (T, M, K).
 
@@ -231,19 +248,21 @@ def spike_patch_mm_train_op(patches: jax.Array, w: jax.Array,
     einsum VJP of the shared-weight batched matmul — dW reduces over T, and
     dPatches feeds the upstream LIF surrogate through the im2col slices'
     own (exact) scatter-add transpose. C (= k*k*c_in) must be a multiple
-    of 8.
+    of 8. ``blocks`` as in :func:`spike_matmul_train_op`.
     """
     return conv_spike.spike_patch_matmul(
-        patches, w, interpret=interpret)
+        patches, w, interpret=interpret,
+        **_block_kwargs(blocks, ("block_m", "block_k", "block_c")))
 
 
-def _spmm_fwd(patches, w, interpret):
+def _spmm_fwd(patches, w, interpret, blocks):
     out = conv_spike.spike_patch_matmul(
-        patches, w, interpret=interpret)
+        patches, w, interpret=interpret,
+        **_block_kwargs(blocks, ("block_m", "block_k", "block_c")))
     return out, (patches, w)
 
 
-def _spmm_bwd(interpret, res, g):
+def _spmm_bwd(interpret, blocks, res, g):
     patches, w = res
     d_patches = jnp.einsum("tmk,ck->tmc", g,
                            w.astype(g.dtype)).astype(patches.dtype)
@@ -273,13 +292,14 @@ def spike_matmul_packed_op(packed: jax.Array, w: jax.Array,
 # Single-launch neuron layer (matmul + BN + SOMA megakernel)
 # ---------------------------------------------------------------------------
 
-@partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8, 9, 10, 11))
+@partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8, 9, 10, 11, 12))
 def neuron_layer_train_op(x: jax.Array, w: jax.Array, gamma: jax.Array,
                           beta: jax.Array, alpha: float = 0.5,
                           th_fire: float = 1.0, th_lo: float = 0.0,
                           th_hi: float = 2.0, grad_scale: float = 1.0,
                           eps: float = 1e-5, packed: bool = False,
-                          interpret: bool | None = None):
+                          interpret: bool | None = None,
+                          blocks: tuple | None = None):
     """Differentiable single-launch neuron layer, train mode:
     ``x (T, M, C) @ w (C, K)`` -> BatchNorm (batch statistics over T*M,
     computed in-kernel) -> SOMA (eq. 11), all in ONE Pallas kernel with no
@@ -305,25 +325,31 @@ def neuron_layer_train_op(x: jax.Array, w: jax.Array, gamma: jax.Array,
     bounded by the surrogate window; persisting (U, S, mask) instead (the
     ASIC's choice) would cost the 3x(T, M, K) HBM traffic this op exists
     to remove. Revisit after the real-TPU soak if parity drifts.
+
+    ``blocks`` is an optional hashable ``(block_k, block_c)`` tuned-block
+    tuple for the train arm (``repro.tune``); the arm has no ``block_m``
+    knob — all T*M rows run in one program for the BN batch statistics.
     """
     s, mu, var = neuron_layer.neuron_layer_train(
         x, w, gamma, beta, alpha=alpha, th_fire=th_fire, eps=eps,
-        packed=packed, interpret=interpret)
+        packed=packed, interpret=interpret,
+        **_block_kwargs(blocks, ("block_k", "block_c")))
     return s, mu.reshape(-1), var.reshape(-1)
 
 
 def _nl_train_fwd(x, w, gamma, beta, alpha, th_fire, th_lo, th_hi,
-                  grad_scale, eps, packed, interpret):
+                  grad_scale, eps, packed, interpret, blocks):
     s, mu, var = neuron_layer.neuron_layer_train(
         x, w, gamma, beta, alpha=alpha, th_fire=th_fire, eps=eps,
-        packed=packed, interpret=interpret)
+        packed=packed, interpret=interpret,
+        **_block_kwargs(blocks, ("block_k", "block_c")))
     sqrt_d = jnp.sqrt(var + eps)
     return (s, mu.reshape(-1), var.reshape(-1)), (x, w, gamma, beta, mu,
                                                   sqrt_d)
 
 
 def _nl_train_bwd(alpha, th_fire, th_lo, th_hi, grad_scale, eps, packed,
-                  interpret, res, g):
+                  interpret, blocks, res, g):
     x, w, gamma, beta, mu, sqrt_d = res
     g_s = g[0]   # mu/var cotangents: running stats sit outside the loss graph
     # Replay: recompute the pre-activation (dense matmul + saved-stat BN) and
@@ -352,34 +378,38 @@ def _nl_train_bwd(alpha, th_fire, th_lo, th_hi, grad_scale, eps, packed,
 neuron_layer_train_op.defvjp(_nl_train_fwd, _nl_train_bwd)
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9))
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9, 10))
 def neuron_layer_eval_op(x: jax.Array, w: jax.Array, bias: jax.Array,
                          alpha: float = 0.5, th_fire: float = 1.0,
                          th_lo: float = 0.0, th_hi: float = 2.0,
                          grad_scale: float = 1.0, packed: bool = False,
-                         interpret: bool | None = None) -> jax.Array:
+                         interpret: bool | None = None,
+                         blocks: tuple | None = None) -> jax.Array:
     """Differentiable single-launch neuron layer, eval mode: BN already
     folded into ``(w, bias)`` (RTFormer re-param, exact for fixed running
     statistics), so the kernel is matmul + bias + SOMA. Returns spikes
     (T, M, K). The backward replays the recomputed pre-activation through
     the GRAD kernel, like the train op (gradients flow to x, w and bias;
     BN-parameter gradients flow through the caller's differentiable fold).
+    ``blocks`` is an optional ``(block_m, block_k, block_c)`` tuned tuple.
     """
     return neuron_layer.neuron_layer_eval(
         x, w, bias, alpha=alpha, th_fire=th_fire, packed=packed,
-        interpret=interpret)
+        interpret=interpret,
+        **_block_kwargs(blocks, ("block_m", "block_k", "block_c")))
 
 
 def _nl_eval_fwd(x, w, bias, alpha, th_fire, th_lo, th_hi, grad_scale,
-                 packed, interpret):
+                 packed, interpret, blocks):
     s = neuron_layer.neuron_layer_eval(
         x, w, bias, alpha=alpha, th_fire=th_fire, packed=packed,
-        interpret=interpret)
+        interpret=interpret,
+        **_block_kwargs(blocks, ("block_m", "block_k", "block_c")))
     return s, (x, w, bias)
 
 
 def _nl_eval_bwd(alpha, th_fire, th_lo, th_hi, grad_scale, packed, interpret,
-                 res, g):
+                 blocks, res, g):
     x, w, bias = res
     y = jnp.einsum("tmc,ck->tmk", x.astype(jnp.float32),
                    w.astype(jnp.float32)) + bias.astype(jnp.float32)

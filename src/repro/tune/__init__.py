@@ -1,0 +1,43 @@
+"""Site-level kernel autotuner (docs/AUTOTUNE.md).
+
+Closes the loop between the paper's §IV-V dataflow/energy model and the
+real kernels: plan-generated workloads (``workloads``), measured spike
+sparsity (``sparsity``), an analytic block-candidate oracle (``oracle``),
+a timed top-K sweep (``autotune``), and persisted tuned-block tables
+(``table``) that kernel dispatch consults at trace time.
+
+Only the table layer is imported eagerly — it sits on the model dispatch
+path (``core/spiking_layers.py``) and must stay import-light; the heavy
+submodules load lazily on first attribute access.
+"""
+from repro.tune.table import (TunedBlocks, active_table, current_device_kind,
+                              describe_tuned, load_table, lookup, parse_key,
+                              reload, save_table, site_key, table_path)
+
+_LAZY = {
+    "SiteWorkload": "workloads", "site_workloads": "workloads",
+    "training_mms": "workloads", "TUNABLE_IMPLS": "workloads",
+    "SparsityReport": "sparsity", "measure_sparsity": "sparsity",
+    "PROBE_OVERRIDES": "sparsity",
+    "OracleCandidate": "oracle", "oracle_array": "oracle",
+    "oracle_rank": "oracle", "oracle_best_dataflow": "oracle",
+    "candidate_cycles": "oracle",
+    "SiteTuneResult": "autotune", "TuneReport": "autotune",
+    "tune": "autotune", "tune_site": "autotune",
+    "tune_and_save": "autotune",
+}
+
+__all__ = [
+    "TunedBlocks", "active_table", "current_device_kind", "describe_tuned",
+    "load_table", "lookup", "parse_key", "reload", "save_table", "site_key",
+    "table_path", *sorted(_LAZY),
+]
+
+
+def __getattr__(name):
+    mod = _LAZY.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+
+    return getattr(importlib.import_module(f"repro.tune.{mod}"), name)

@@ -1,0 +1,230 @@
+"""Site-level kernel autotuner: oracle-pruned, warm-up-blocked timing.
+
+Per tunable site (``repro.tune.workloads.TUNABLE_IMPLS``):
+
+1. the analytic oracle ranks every feasible block candidate
+   (:func:`repro.tune.oracle.oracle_rank` — pure arithmetic);
+2. only the top-K candidates are timed, on synthetic operands drawn at
+   the site's *measured* sparsity, with one warm-up call blocked on
+   before the timed reps (compile time never leaks into rep 1);
+3. the measured winner is persisted as a
+   :class:`repro.tune.table.TunedBlocks` entry keyed by
+   ``(device_kind, site, op, impl, shape, packing)``.
+
+Timings run whatever ``resolve_interpret`` decides — interpret-mode
+(CPU) numbers land under the ``interpret`` device kind and never collide
+with real-TPU keys.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.tune.oracle import OracleCandidate, oracle_array, oracle_rank
+from repro.tune.sparsity import SparsityReport, measure_sparsity
+from repro.tune.table import TunedBlocks, save_table, site_key
+from repro.tune.workloads import SiteWorkload, site_workloads
+
+logger = logging.getLogger(__name__)
+
+
+def _time(fn, *args, reps: int = 3) -> float:
+    """Microseconds per call; the warm-up call is blocked on first so the
+    reps never include compile time (same pattern as bench_kernels)."""
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def _spikes(rng: np.random.Generator, shape, sparsity: float) -> jax.Array:
+    return jnp.asarray(
+        (rng.random(shape) >= sparsity).astype(np.float32))
+
+
+def _dense(rng: np.random.Generator, shape) -> jax.Array:
+    return jnp.asarray(rng.standard_normal(shape).astype(np.float32))
+
+
+def _time_candidate(wl: SiteWorkload, cand: OracleCandidate,
+                    interpret: bool | None, reps: int) -> float | None:
+    """Run one candidate's kernel on synthetic sparsity-matched operands.
+    Returns us/call, or None when this (op, impl, arm) has no timed path.
+    """
+    from repro.kernels import neuron_layer, spike_matmul
+
+    rng = np.random.default_rng(0)
+    sp = wl.mm.in_sparsity if wl.mm is not None else 0.0
+    bm, bk, bc = cand.block_m, cand.block_k, cand.block_c
+
+    if (wl.op, wl.impl) == ("linear_bn", "pallas+spike_mm"):
+        s, c, k = wl.shape
+        x = spike_matmul.spike_pack(_spikes(rng, (s, c), sp))
+        w = _dense(rng, (c, k))
+        return _time(lambda: spike_matmul.spike_matmul_packed(
+            x, w, block_m=bm, block_k=bk, block_c=bc,
+            interpret=interpret), reps=reps)
+
+    if (wl.op, wl.impl) == ("conv", "pallas_packed"):
+        t, m, c, k = wl.shape
+        x = spike_matmul.spike_pack(_spikes(rng, (t, m, c), sp))
+        w = jnp.broadcast_to(_dense(rng, (c, k)), (t, c, k))
+        return _time(lambda: spike_matmul.spike_matmul_packed_batched(
+            x, w, block_m=bm, block_k=bk, block_c=bc,
+            interpret=interpret), reps=reps)
+
+    if wl.op in ("attn_qk", "attn_av"):
+        g, b, c, k = wl.shape
+        x = spike_matmul.spike_pack(_spikes(rng, (g, b, c), sp))
+        w = _dense(rng, (g, c, k))
+        return _time(lambda: spike_matmul.spike_matmul_packed_batched(
+            x, w, block_m=bm, block_k=bk, block_c=bc,
+            interpret=interpret), reps=reps)
+
+    if wl.impl == "fused_epilogue":
+        t, m, c, k = wl.shape
+        x = _spikes(rng, (t, m, c), sp)
+        w = _dense(rng, (c, k))
+        gamma = jnp.ones((k,), jnp.float32)
+        beta = jnp.zeros((k,), jnp.float32)
+        if cand.arm == "pipeline":
+            fn = _pipeline_arm_fn(wl.packed, bm, bk, bc, interpret)
+            return _time(fn, x, w, gamma, beta, reps=reps)
+        return _time(lambda: neuron_layer.neuron_layer_train(
+            x, w, gamma, beta, packed=wl.packed, block_k=bk, block_c=bc,
+            interpret=interpret), reps=reps)
+
+    return None
+
+
+def _pipeline_arm_fn(packed: bool, bm, bk, bc, interpret):
+    """The 3-launch pipeline the fused arm competes against: M-tiled
+    (packed or dense) matmul -> batch-stats BN -> eq. 11 SOMA scan."""
+    from repro.kernels import spike_matmul
+
+    @jax.jit
+    def fn(x, w, gamma, beta):
+        t, m, c = x.shape
+        x2 = x.reshape(t * m, c)
+        if packed:
+            y = spike_matmul.spike_matmul_packed(
+                spike_matmul.spike_pack(x2), w, block_m=bm, block_k=bk,
+                block_c=bc, interpret=interpret)
+        else:
+            y = x2 @ w
+        mu = jnp.mean(y, axis=0)
+        var = jnp.mean(jnp.square(y), axis=0) - jnp.square(mu)
+        y = (y - mu) * jax.lax.rsqrt(var + 1e-5) * gamma + beta
+        y = y.reshape(t, m, -1)
+
+        def soma(carry, xt):
+            u = 0.5 * carry[0] * (1.0 - carry[1]) + xt
+            s = (u >= 1.0).astype(xt.dtype)
+            return (u, s), s
+
+        zero = jnp.zeros_like(y[0])
+        (_, _), spikes = jax.lax.scan(soma, (zero, zero), y)
+        return spikes
+
+    return fn
+
+
+@dataclasses.dataclass(frozen=True)
+class SiteTuneResult:
+    workload: SiteWorkload
+    ranked: tuple[OracleCandidate, ...]      # oracle order, best first
+    timed: tuple[tuple[OracleCandidate, float], ...]   # (candidate, us)
+    winner: OracleCandidate | None
+    winner_us: float | None
+
+    @property
+    def winner_in_top1(self) -> bool | None:
+        if self.winner is None or not self.ranked:
+            return None
+        return self.winner == self.ranked[0]
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneReport:
+    entries: dict[str, TunedBlocks]          # site_key -> winner
+    results: tuple[SiteTuneResult, ...]
+    sparsity: SparsityReport | None
+    device_kind: str
+
+
+def tune_site(wl: SiteWorkload, *, top_k: int = 3, reps: int = 3,
+              interpret: bool | None = None,
+              arr=None) -> SiteTuneResult | None:
+    """Oracle-rank then time the top-K candidates for one site."""
+    ranked = oracle_rank(wl, arr if arr is not None else oracle_array())
+    if not ranked:
+        return None
+    timed = []
+    for cand in ranked[:max(1, top_k)]:
+        try:
+            us = _time_candidate(wl, cand, interpret, reps)
+        except Exception as e:           # a candidate must never kill the sweep
+            logger.warning("timing %s %s failed: %s", wl.site, cand, e)
+            us = None
+        if us is not None:
+            timed.append((cand, us))
+    if not timed:
+        return SiteTuneResult(wl, tuple(ranked), (), None, None)
+    winner, winner_us = min(timed, key=lambda cu: cu[1])
+    return SiteTuneResult(wl, tuple(ranked), tuple(timed), winner,
+                          winner_us)
+
+
+def tune(cfg, *, batch: int = 1, sites: list[str] | None = None,
+         top_k: int = 3, reps: int = 3, smoke: bool = False,
+         seed: int = 0, measure: bool = True) -> TuneReport:
+    """Tune every tunable site of a model config's execution plan.
+
+    ``smoke`` shrinks the sweep to a 2-candidate, single-rep pass (the CI
+    autotune-smoke leg). Sparsity is *measured* from an instrumented
+    forward unless ``measure=False`` (paper defaults then apply).
+    """
+    from repro.tune.table import current_device_kind
+
+    if smoke:
+        top_k, reps = 2, 1
+    report = measure_sparsity(cfg, batch=max(batch, 2), seed=seed) \
+        if measure else None
+    site_sp = report.site_sparsity() if report is not None else None
+    interpret = cfg.policy.interpret
+    entries: dict[str, TunedBlocks] = {}
+    results = []
+    for wl in site_workloads(cfg, batch, site_sp):
+        if sites is not None and wl.site not in sites:
+            continue
+        if not wl.tunable:
+            continue
+        res = tune_site(wl, top_k=top_k, reps=reps, interpret=interpret)
+        if res is None:
+            continue
+        results.append(res)
+        if res.winner is not None:
+            key = site_key(wl.site, wl.op, wl.impl, wl.shape, wl.packed)
+            entries[key] = res.winner.as_tuned(
+                measured_us=round(res.winner_us, 3),
+                sparsity=round(wl.mm.in_sparsity, 4) if wl.mm else None)
+    return TuneReport(entries=entries, results=tuple(results),
+                      sparsity=report, device_kind=current_device_kind())
+
+
+def tune_and_save(cfg, path, **kw) -> TuneReport:
+    """Run :func:`tune` and persist the winners as a versioned table."""
+    rep = tune(cfg, **kw)
+    save_table(path, rep.entries, meta={"device_kind": rep.device_kind})
+    logger.info("wrote %d tuned-block entries to %s", len(rep.entries),
+                path)
+    return rep

@@ -1,0 +1,196 @@
+"""Measured per-site spike sparsity from one instrumented training forward.
+
+The paper's energy model takes sparsity as an *input* (``Sparsity(s_s,
+s_smg, s_pg)``, defaults from §V). Here we measure it: a set of ``probe``
+registry impls wrap the jnp reference kernels and count zeros in the
+spike operand at every LIF / packed-matmul site via ``jax.debug.callback``
+(host-side accumulation; works under jit). Running the forward with a
+distinct probe :class:`~repro.core.policy.ExecutionPolicy` also changes
+the static jit keys of ``lif_scan`` et al., so probes always trace fresh
+— the instrumented run can never reuse a stale uninstrumented trace.
+
+Measured quantities:
+
+* per-site zeros-fraction of the matmul/LIF input spike operand (feeds
+  ``MMOp.in_sparsity`` in ``repro.tune.workloads``);
+* per-LIF-site spike-output sparsity (the paper's ``s_s``) and surrogate
+  gradient-mask sparsity (``s_smg``, via ``spike_grad_mask`` on the
+  replayed membrane trajectory).
+
+``s_pg`` (partial-sum gradient sparsity) needs backward instrumentation
+and keeps the paper default — documented in ``docs/AUTOTUNE.md``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.energy.constants import DEFAULT_SPARSITY, Sparsity
+from repro.core.policy import ExecutionPolicy, register_kernel
+
+# site -> kind ("in" | "spike" | "mask") -> [nonzeros, total]
+_ACC: dict[tuple[str, str], list[float]] = {}
+
+
+def _reset() -> None:
+    _ACC.clear()
+
+
+def _record_host(site: str, kind: str, total: float, nonzeros) -> None:
+    acc = _ACC.setdefault((site, kind), [0.0, 0.0])
+    acc[0] += float(nonzeros)
+    acc[1] += total
+
+
+def _emit(site: str, kind: str, arr: jax.Array) -> None:
+    nz = jnp.sum(arr != 0).astype(jnp.float32)
+    jax.debug.callback(
+        functools.partial(_record_host, site, kind, float(arr.size)), nz)
+
+
+# ---------------------------------------------------------------------------
+# Probe impls (jnp reference semantics + counting; never used for speed)
+# ---------------------------------------------------------------------------
+
+@register_kernel("lif", "probe")
+def _lif_probe(x_seq, cfg, site):
+    from repro.core.lif import lif_step, spike_grad_mask
+
+    u0 = jnp.zeros_like(x_seq[0])
+    s0 = jnp.zeros_like(x_seq[0])
+
+    def step(carry, x):
+        u_prev, s_prev = carry
+        u, s = lif_step(u_prev, s_prev, x, cfg)
+        return (u, s), (u, s)
+
+    (_, _), (us, spikes) = jax.lax.scan(step, (u0, s0), x_seq)
+    _emit(site, "spike", spikes)
+    _emit(site, "mask", spike_grad_mask(us, cfg))
+    return spikes
+
+
+@register_kernel("lif_state", "probe")
+def _lif_state_probe(x_seq, u0, s0, cfg, site):
+    from repro.core.lif import lif_step, spike_grad_mask
+
+    def step(carry, x):
+        u_prev, s_prev = carry
+        u, s = lif_step(u_prev, s_prev, x, cfg)
+        return (u, s), (u, s)
+
+    (u, s), (us, spikes) = jax.lax.scan(step, (u0, s0), x_seq)
+    _emit(site, "spike", spikes)
+    _emit(site, "mask", spike_grad_mask(us, cfg))
+    return spikes, (u, s)
+
+
+@register_kernel("linear_bn", "probe")
+def _linear_bn_probe(params, state, x, train, policy, site):
+    from repro.core.spiking_layers import _linear_bn_jnp
+
+    _emit(site, "in", x)
+    return _linear_bn_jnp(params, state, x, train, policy, site)
+
+
+@register_kernel("conv", "probe")
+def _conv_probe(params, state, x, lif_cfg, train, spike_in, policy, site):
+    from repro.core.spikingformer import _conv_stage_jnp
+
+    if spike_in:
+        _emit(site, "in", x)
+    return _conv_stage_jnp(params, state, x, lif_cfg, train, spike_in,
+                           policy, site)
+
+
+@register_kernel("attn_qk", "probe")
+def _attn_qk_probe(q, k, policy, site):
+    from repro.core.spiking_layers import _attn_qk_jnp
+
+    _emit(site, "in", q)
+    return _attn_qk_jnp(q, k, policy, site)
+
+
+@register_kernel("attn_av", "probe")
+def _attn_av_probe(attn, v, policy, site):
+    from repro.core.spiking_layers import _attn_av_jnp
+
+    _emit(site, "in", v)    # V is the packed (spike) operand
+    return _attn_av_jnp(attn, v, policy, site)
+
+
+PROBE_OVERRIDES = (("lif", "probe"), ("lif_state", "probe"),
+                   ("linear_bn", "probe"), ("conv", "probe"),
+                   ("attn_qk", "probe"), ("attn_av", "probe"))
+
+
+# ---------------------------------------------------------------------------
+# Measurement driver
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SparsityReport:
+    """Zeros-fractions per site from one instrumented forward."""
+
+    operand: dict[str, float]       # matmul sites: input-operand zeros
+    spike: dict[str, float]         # LIF sites: output-spike zeros (s_s)
+    mask: dict[str, float]          # LIF sites: surrogate-mask zeros (s_smg)
+    totals: dict[tuple[str, str], float]
+
+    def site_sparsity(self) -> dict[str, float]:
+        """site -> in_sparsity for :func:`repro.tune.workloads
+        .site_workloads`: the measured input-operand sparsity where a
+        probe saw the operand, else the measured LIF-output sparsity."""
+        return {**self.spike, **self.operand}
+
+    def aggregate(self) -> Sparsity:
+        """Element-weighted means, folded into the paper's ``Sparsity``.
+        ``s_pg`` keeps the default (no backward instrumentation)."""
+        def mean(kind: str, default: float) -> float:
+            num = den = 0.0
+            for (site, k), (nz, total) in self.totals.items():
+                if k == kind:
+                    num += total - nz
+                    den += total
+            return num / den if den else default
+
+        return Sparsity(s_s=mean("spike", DEFAULT_SPARSITY.s_s),
+                        s_smg=mean("mask", DEFAULT_SPARSITY.s_smg),
+                        s_pg=DEFAULT_SPARSITY.s_pg)
+
+
+def measure_sparsity(cfg, batch: int = 2, seed: int = 0,
+                     train: bool = True) -> SparsityReport:
+    """Run one seeded synthetic forward under the probe policy and return
+    the measured per-site sparsities. Deterministic for a given (cfg,
+    batch, seed) — the bench energy section relies on that."""
+    from repro.core.spikingformer import (init_spikingformer,
+                                          spikingformer_apply)
+
+    probe = ExecutionPolicy(backend="jnp", overrides=PROBE_OVERRIDES)
+    pcfg = cfg.with_policy(probe)
+    key = jax.random.PRNGKey(seed)
+    k_init, k_data = jax.random.split(key)
+    params, state = init_spikingformer(k_init, pcfg)
+    shape = (batch, cfg.image_size, cfg.image_size, cfg.in_channels)
+    if cfg.spike_input:
+        x = jax.random.bernoulli(
+            k_data, 0.5, (cfg.time_steps,) + shape).astype(cfg.dtype)
+    else:
+        x = jax.random.uniform(k_data, shape, cfg.dtype)
+    _reset()
+    logits, _ = spikingformer_apply(params, state, x, pcfg, train=train)
+    jax.block_until_ready(logits)
+    jax.effects_barrier()
+
+    def frac(kind: str) -> dict[str, float]:
+        return {site: 1.0 - nz / total
+                for (site, k), (nz, total) in sorted(_ACC.items())
+                if k == kind and total}
+
+    return SparsityReport(operand=frac("in"), spike=frac("spike"),
+                          mask=frac("mask"),
+                          totals={k: tuple(v) for k, v in _ACC.items()})

@@ -1,0 +1,211 @@
+"""Versioned tuned-block tables: persisted autotuner winners per site.
+
+A table maps ``(device_kind, site, op, impl, shape, packing)`` keys to the
+kernel block sizes (and, at trailing-LIF sites, the fused-vs-pipeline arm)
+the autotuner measured as fastest. Kernel dispatch consults the active
+table at trace time: explicit policy overrides still pick the *impl* —
+tuned entries only choose the blocks/arm of whatever impl the policy
+resolved — and unknown keys fall back to the kernels' built-in defaults,
+logged once at INFO.
+
+The active table is ``$REPRO_TUNED_BLOCKS`` if set, else the repo-default
+``benchmarks/tuned_blocks.json`` when it exists, else nothing. It is
+loaded once per process; call :func:`reload` after writing a new table.
+Invalidation caveat: block lookups happen while tracing jitted callables,
+so traces cached before a ``reload()`` keep their old blocks — new traces
+(new shapes, or a fresh process) pick up the new table.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import logging
+import os
+import pathlib
+
+logger = logging.getLogger(__name__)
+
+TABLE_VERSION = 1
+ENV_VAR = "REPRO_TUNED_BLOCKS"
+#: Repo-default table location (only consulted when the file exists).
+DEFAULT_PATH = pathlib.Path(__file__).resolve().parents[3] / "benchmarks" \
+    / "tuned_blocks.json"
+
+ARMS = ("fused", "pipeline")
+
+
+@dataclasses.dataclass(frozen=True)
+class TunedBlocks:
+    """One table entry: the winning blocks (None = kernel default) plus the
+    provenance the audit/bench layers render."""
+
+    block_m: int | None = None
+    block_k: int | None = None
+    block_c: int | None = None
+    arm: str | None = None            # trailing-LIF sites: fused | pipeline
+    oracle_cycles: float | None = None
+    measured_us: float | None = None
+    sparsity: float | None = None
+
+    def mm_blocks(self) -> tuple[int, int, int] | None:
+        """(block_m, block_k, block_c) for the spike-matmul family ops."""
+        if None in (self.block_m, self.block_k, self.block_c):
+            return None
+        return (self.block_m, self.block_k, self.block_c)
+
+    def train_blocks(self) -> tuple[int, int] | None:
+        """(block_k, block_c) for the train-arm megakernel (its BN-stats
+        constraint pins all T*M rows to one program — no block_m)."""
+        if None in (self.block_k, self.block_c):
+            return None
+        return (self.block_k, self.block_c)
+
+
+def current_device_kind() -> str:
+    """Key component: the accelerator the timings were taken on.
+
+    Interpret-mode timings (every CPU/CI run) are emulation numbers, so
+    they get their own kind and never leak onto a real TPU's key space.
+    """
+    from repro.core.backend import resolve_interpret
+
+    if resolve_interpret(None):
+        return "interpret"
+    import jax
+    return jax.devices()[0].device_kind.replace(" ", "-")
+
+
+def site_key(site: str, op: str, impl: str, shape: tuple[int, ...],
+             packed: bool, device_kind: str | None = None) -> str:
+    kind = device_kind if device_kind is not None else current_device_kind()
+    dims = "x".join(str(int(d)) for d in shape)
+    return "|".join([kind, site, op, impl, dims,
+                     "packed" if packed else "dense"])
+
+
+def parse_key(key: str) -> tuple[str, str, str, str, tuple[int, ...], bool]:
+    """Inverse of :func:`site_key`; raises ValueError on malformed keys."""
+    parts = key.split("|")
+    if len(parts) != 6:
+        raise ValueError(f"tuned-block key needs 6 '|' fields, got {key!r}")
+    kind, site, op, impl, dims, pack = parts
+    if pack not in ("packed", "dense"):
+        raise ValueError(f"packing field must be packed|dense, got {pack!r}")
+    shape = tuple(int(d) for d in dims.split("x") if d)
+    return kind, site, op, impl, shape, pack == "packed"
+
+
+# ---------------------------------------------------------------------------
+# Load / save / process-wide cache
+# ---------------------------------------------------------------------------
+
+_FIELDS = tuple(f.name for f in dataclasses.fields(TunedBlocks))
+_CACHE: dict[str, TunedBlocks] | None = None
+_MISS_LOGGED: set[str] = set()
+
+
+def table_path() -> pathlib.Path | None:
+    env = os.environ.get(ENV_VAR)
+    if env:
+        return pathlib.Path(env)
+    return DEFAULT_PATH if DEFAULT_PATH.exists() else None
+
+
+def load_table(path: str | os.PathLike) -> dict[str, TunedBlocks]:
+    """Parse one table file. Unsupported versions load as empty (warned):
+    an old table must degrade to kernel defaults, never crash dispatch."""
+    raw = json.loads(pathlib.Path(path).read_text())
+    version = raw.get("version")
+    if version != TABLE_VERSION:
+        logger.warning("tuned-block table %s has version %r (supported: %d);"
+                       " ignoring it", path, version, TABLE_VERSION)
+        return {}
+    out = {}
+    for key, entry in raw.get("entries", {}).items():
+        out[key] = TunedBlocks(**{k: v for k, v in entry.items()
+                                  if k in _FIELDS})
+    return out
+
+
+def save_table(path: str | os.PathLike, entries: dict[str, TunedBlocks],
+               *, meta: dict | None = None) -> None:
+    doc = {"version": TABLE_VERSION, **(meta or {})}
+    doc["entries"] = {
+        key: {k: v for k, v in dataclasses.asdict(tb).items()
+              if v is not None}
+        for key, tb in sorted(entries.items())}
+    pathlib.Path(path).write_text(json.dumps(doc, indent=1, sort_keys=True)
+                                  + "\n")
+
+
+def active_table() -> dict[str, TunedBlocks]:
+    global _CACHE
+    if _CACHE is None:
+        path = table_path()
+        try:
+            _CACHE = load_table(path) if path is not None else {}
+        except (OSError, ValueError, TypeError, json.JSONDecodeError) as e:
+            logger.warning("could not load tuned-block table %s: %s; "
+                           "kernel defaults stay in effect", path, e)
+            _CACHE = {}
+        if _CACHE:
+            logger.info("tuned-block table active: %s (%d entries)",
+                        path, len(_CACHE))
+    return _CACHE
+
+
+def reload() -> None:
+    """Drop the process-wide cache (tests, or after writing a new table).
+    Already-traced jitted callables keep the blocks they traced with."""
+    global _CACHE
+    _CACHE = None
+    _MISS_LOGGED.clear()
+
+
+def lookup(site: str, op: str, impl: str, shape: tuple[int, ...],
+           packed: bool) -> TunedBlocks | None:
+    """Dispatch-time lookup. None = no table / no entry -> kernel defaults
+    (logged once per key at INFO when a table is active)."""
+    table = active_table()
+    if not table:
+        return None
+    key = site_key(site, op, impl, shape, packed)
+    hit = table.get(key)
+    if hit is None and key not in _MISS_LOGGED:
+        _MISS_LOGGED.add(key)
+        logger.info("no tuned blocks for %s; kernel defaults in effect", key)
+    return hit
+
+
+# ---------------------------------------------------------------------------
+# Rendering (describe_execution appends this next to the dispatch table)
+# ---------------------------------------------------------------------------
+
+def describe_tuned(sites: list[str] | None = None) -> str:
+    """CSV block of the active table's entries for the current device kind,
+    filtered to ``sites`` when given."""
+    path = table_path()
+    table = active_table()
+    kind = current_device_kind()
+    rows = []
+    for key in sorted(table):
+        try:
+            dkind, site, op, impl, shape, packed = parse_key(key)
+        except ValueError:
+            continue
+        if dkind != kind or (sites is not None and site not in sites):
+            continue
+        tb = table[key]
+        rows.append(
+            f"{site},{op},{impl},{'x'.join(map(str, shape))},"
+            f"{'packed' if packed else 'dense'},"
+            f"{tb.block_m if tb.block_m is not None else '-'},"
+            f"{tb.block_k if tb.block_k is not None else '-'},"
+            f"{tb.block_c if tb.block_c is not None else '-'},"
+            f"{tb.arm or '-'}")
+    head = f"# TunedBlocks device={kind} source={path if table else 'none'}"
+    if not rows:
+        return head + "\n(no tuned entries; kernel defaults in effect)"
+    return "\n".join([head,
+                      "site,op,impl,shape,packing,block_m,block_k,block_c,"
+                      "arm", *rows])

@@ -1,0 +1,300 @@
+"""Site-level autotuner: oracle stability, tuned-table round trips,
+plan-generated workloads, key validation (docs/AUTOTUNE.md)."""
+import dataclasses
+import json
+import logging
+
+import pytest
+
+from repro.analysis.audit import audit_tuned_table
+from repro.configs.spikingformer import get_spikingformer_config
+from repro.core.energy.workload import MMOp
+from repro.tune import table as tb
+from repro.tune.oracle import (VMEM_BUDGET_BYTES, oracle_best_dataflow,
+                               oracle_rank)
+from repro.tune.table import (TABLE_VERSION, TunedBlocks, describe_tuned,
+                              load_table, lookup, parse_key, save_table,
+                              site_key)
+from repro.tune.workloads import (TUNABLE_IMPLS, SiteWorkload,
+                                  site_workloads, training_mms)
+
+SMOKE = "spikingformer-smoke@pallas-full"
+
+
+@pytest.fixture
+def clean_table(monkeypatch, tmp_path):
+    """Point the active table at a tmp file; always reload on teardown so
+    no cached table leaks into other tests."""
+    path = tmp_path / "tuned_blocks.json"
+    monkeypatch.setenv(tb.ENV_VAR, str(path))
+    tb.reload()
+    yield path
+    tb.reload()
+
+
+def _wl(impl="pallas+spike_mm", op="linear_bn", shape=(64, 128, 64),
+        packed=True, trailing=False, sparsity=0.75):
+    return SiteWorkload(
+        site="smlp.a", op=op, impl=impl, packed=packed, shape=shape,
+        calls=1, trailing_lif=trailing,
+        mm=MMOp("smlp.a", "FP", shape[-3], shape[-2], shape[-1],
+                in_bits=1 if packed else 16, in_sparsity=sparsity))
+
+
+# ---------------------------------------------------------------------------
+# Oracle
+# ---------------------------------------------------------------------------
+
+def test_oracle_ranking_stable_across_runs():
+    """The ranking is a pure function of the workload: two calls agree
+    exactly, and the order is total (cycles then block tuple)."""
+    wl = _wl()
+    a, b = oracle_rank(wl), oracle_rank(wl)
+    assert a and a == b
+    assert [c.cycles for c in a] == sorted(c.cycles for c in a)
+    assert all(c.feasible and c.vmem_bytes <= VMEM_BUDGET_BYTES for c in a)
+
+
+def test_oracle_dedupes_snapped_candidates():
+    """block_c candidates snap to divisors of C; the snapped duplicates
+    must collapse to distinct (bm, bk, bc, arm) tuples."""
+    ranked = oracle_rank(_wl(shape=(64, 96, 64)))  # 96: snaps all bc cands
+    keys = [(c.block_m, c.block_k, c.block_c, c.arm) for c in ranked]
+    assert len(keys) == len(set(keys))
+
+
+def test_oracle_fused_site_ranks_both_arms():
+    wl = _wl(impl="fused_epilogue", shape=(4, 16, 128, 64), trailing=True)
+    arms = {c.arm for c in oracle_rank(wl)}
+    assert arms == {"fused", "pipeline"}
+    for c in oracle_rank(wl):
+        assert (c.block_m is None) == (c.arm == "fused")
+
+
+def test_oracle_empty_for_non_tunable():
+    assert oracle_rank(_wl(impl="jnp")) == []
+    assert oracle_rank(dataclasses.replace(_wl(), mm=None)) == []
+
+
+def test_oracle_top_k_prefix():
+    wl = _wl()
+    assert oracle_rank(wl, top_k=3) == oracle_rank(wl)[:3]
+
+
+# ---------------------------------------------------------------------------
+# Plan-generated workloads
+# ---------------------------------------------------------------------------
+
+def test_site_workloads_cover_the_plan():
+    cfg = get_spikingformer_config(SMOKE)
+    wls = site_workloads(cfg, batch=1)
+    by_site = {w.site: w for w in wls}
+    plan_sites = {r.site for r in cfg.execution_plan()}
+    assert set(by_site) <= plan_sites
+    tunable = [w for w in wls if w.tunable]
+    assert len(tunable) >= 6          # conv stages + qkv/proj/mlp + attn
+    for w in tunable:
+        assert (w.op, w.impl) in TUNABLE_IMPLS
+        assert w.mm is not None and min(w.shape) > 0
+        # the MM's FP row matches the canonical dispatch shape
+        assert w.mm.C == w.shape[-2] and w.mm.K == w.shape[-1]
+
+
+def test_site_workloads_attention_geometry():
+    cfg = get_spikingformer_config(SMOKE)
+    wls = {w.site: w for w in site_workloads(cfg, batch=2)}
+    n, d, h = cfg.num_tokens, cfg.d_model, cfg.n_heads
+    g = cfg.time_steps * 2 * h
+    assert wls["attn_qk"].shape == (g, n, d // h, n)
+    assert wls["attn_av"].shape == (g, d // h, n, n)
+
+
+def test_training_mms_bp_wg_structure():
+    wl = _wl()
+    fp, bp, wg = training_mms(wl)
+    assert (bp.C, bp.K) == (fp.K, fp.C)       # BP transposes the weight
+    assert bp.in_bits == 16 and bp.in_sparsity == 0.0   # dense gradients
+    assert (wg.B, wg.C) == (fp.C, fp.B)       # WG re-uses the spike operand
+    assert wg.in_sparsity == fp.in_sparsity
+    assert oracle_best_dataflow(wl) != "-"
+
+
+def test_measured_sparsity_reaches_the_mm():
+    cfg = get_spikingformer_config(SMOKE)
+    wls = {w.site: w for w in site_workloads(cfg, 1, {"smlp.a": 0.123})}
+    assert wls["smlp.a"].mm.in_sparsity == pytest.approx(0.123)
+
+
+# ---------------------------------------------------------------------------
+# Tuned-block table
+# ---------------------------------------------------------------------------
+
+def test_site_key_round_trip():
+    key = site_key("smlp.a", "linear_bn", "pallas+spike_mm",
+                   (64, 128, 64), True, device_kind="interpret")
+    assert parse_key(key) == ("interpret", "smlp.a", "linear_bn",
+                              "pallas+spike_mm", (64, 128, 64), True)
+    with pytest.raises(ValueError):
+        parse_key("too|few|fields")
+    with pytest.raises(ValueError):
+        parse_key("k|s|o|i|64x64|sideways")
+
+
+def test_table_save_load_round_trip(tmp_path):
+    entry = TunedBlocks(block_m=128, block_k=256, block_c=512,
+                        arm="pipeline", oracle_cycles=123.0,
+                        measured_us=4.5, sparsity=0.8)
+    key = site_key("smlp.a", "linear_bn", "pallas+spike_mm",
+                   (64, 128, 64), True, device_kind="interpret")
+    path = tmp_path / "t.json"
+    save_table(path, {key: entry}, meta={"device_kind": "interpret"})
+    assert load_table(path) == {key: entry}
+    # None fields are dropped on disk, restored as None on load
+    save_table(path, {key: TunedBlocks(block_k=128, block_c=128)})
+    (loaded,) = load_table(path).values()
+    assert loaded.block_m is None and loaded.arm is None
+
+
+def test_table_version_mismatch_loads_empty(tmp_path, caplog):
+    path = tmp_path / "t.json"
+    path.write_text(json.dumps({"version": TABLE_VERSION + 1,
+                                "entries": {"x": {}}}))
+    with caplog.at_level(logging.WARNING, logger="repro.tune.table"):
+        assert load_table(path) == {}
+    assert any("version" in r.message for r in caplog.records)
+
+
+def test_lookup_hit_and_once_per_key_miss_log(clean_table, caplog):
+    entry = TunedBlocks(block_m=128, block_k=128, block_c=128)
+    key = site_key("smlp.a", "linear_bn", "pallas+spike_mm",
+                   (64, 128, 64), True)
+    save_table(clean_table, {key: entry})
+    tb.reload()
+    assert lookup("smlp.a", "linear_bn", "pallas+spike_mm",
+                  (64, 128, 64), True) == entry
+    with caplog.at_level(logging.INFO, logger="repro.tune.table"):
+        for _ in range(3):            # miss: logged once, not three times
+            assert lookup("smlp.a", "linear_bn", "pallas+spike_mm",
+                          (999, 128, 64), True) is None
+    misses = [r for r in caplog.records if "no tuned blocks" in r.message]
+    assert len(misses) == 1
+
+
+def test_lookup_without_table_is_silent_none(monkeypatch, caplog):
+    monkeypatch.setenv(tb.ENV_VAR, "/nonexistent/tuned.json")
+    tb.reload()
+    try:
+        with caplog.at_level(logging.INFO, logger="repro.tune.table"):
+            assert lookup("smlp.a", "linear_bn", "pallas+spike_mm",
+                          (64, 128, 64), True) is None
+        assert not [r for r in caplog.records
+                    if "no tuned blocks" in r.message]
+    finally:
+        tb.reload()
+
+
+def test_describe_tuned_renders_entries(clean_table):
+    key = site_key("smlp.a", "linear_bn", "pallas+spike_mm",
+                   (64, 128, 64), True)
+    save_table(clean_table, {key: TunedBlocks(block_m=128, block_k=256,
+                                              block_c=512)})
+    tb.reload()
+    out = describe_tuned(["smlp.a"])
+    assert "# TunedBlocks device=" in out
+    assert "smlp.a,linear_bn,pallas+spike_mm,64x128x64,packed,128,256,512,-" \
+        in out
+    assert "no tuned entries" in describe_tuned(["not.a.site"])
+
+
+def test_mm_and_train_block_views():
+    assert TunedBlocks(block_m=1, block_k=2, block_c=3).mm_blocks() == \
+        (1, 2, 3)
+    assert TunedBlocks(block_k=2, block_c=3).mm_blocks() is None
+    assert TunedBlocks(block_k=2, block_c=3).train_blocks() == (2, 3)
+    assert TunedBlocks(block_c=3).train_blocks() is None
+
+
+# ---------------------------------------------------------------------------
+# Audit rule
+# ---------------------------------------------------------------------------
+
+def _errors(findings):
+    return [f for f in findings if f.level == "error"]
+
+
+def test_audit_accepts_valid_table(tmp_path):
+    key = site_key("smlp.a", "linear_bn", "pallas+spike_mm",
+                   (64, 128, 64), True, device_kind="interpret")
+    path = tmp_path / "good.json"
+    save_table(path, {key: TunedBlocks(block_m=128, block_k=128,
+                                       block_c=128)})
+    assert _errors(audit_tuned_table(str(path))) == []
+
+
+def test_audit_flags_stale_and_malformed_keys(tmp_path):
+    good = TunedBlocks(block_m=128, block_k=128, block_c=128)
+    entries = {
+        # stale site key (renamed/removed dispatch site)
+        site_key("gone.site", "linear_bn", "pallas+spike_mm",
+                 (64, 128, 64), True, device_kind="x"): good,
+        # impl with no block knobs
+        site_key("smlp.a", "linear_bn", "jnp",
+                 (64, 128, 64), False, device_kind="x"): good,
+        # shape mismatch with the packing contract (C % 8 != 0)
+        site_key("smlp.a", "linear_bn", "pallas+spike_mm",
+                 (64, 130, 64), True, device_kind="x"): good,
+        # negative block size
+        site_key("smlp.b", "linear_bn", "pallas+spike_mm",
+                 (64, 128, 64), True, device_kind="x"):
+        TunedBlocks(block_m=-1, block_k=128, block_c=128),
+    }
+    path = tmp_path / "bad.json"
+    save_table(path, entries)
+    msgs = "\n".join(f.message for f in _errors(audit_tuned_table(str(path))))
+    assert "stale key" in msgs
+    assert "no block knobs" in msgs
+    assert "% 8 != 0" in msgs
+    assert "block_m=-1" in msgs
+
+
+def test_audit_rejects_version_mismatch(tmp_path):
+    path = tmp_path / "old.json"
+    path.write_text(json.dumps({"version": 0, "entries": {}}))
+    errs = _errors(audit_tuned_table(str(path)))
+    assert errs and "version" in errs[0].message
+
+
+def test_audit_no_table_is_info_only(monkeypatch):
+    monkeypatch.delenv(tb.ENV_VAR, raising=False)
+    monkeypatch.setattr(tb, "DEFAULT_PATH", tb.DEFAULT_PATH.parent /
+                        "definitely_missing.json")
+    findings = audit_tuned_table()
+    assert _errors(findings) == []
+    assert any("no tuned-block table" in f.message for f in findings)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end (interpret mode; the timed sweep is slow-marked)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_measured_winner_within_oracle_top_k(clean_table):
+    """Smoke-tune one site: the timed winner must be one of the oracle's
+    top-K candidates (the sweep times nothing else by construction), the
+    persisted entry must carry measured (not default) sparsity, and the
+    table must round-trip through lookup."""
+    from repro.tune.autotune import tune_and_save
+
+    cfg = get_spikingformer_config(SMOKE)
+    rep = tune_and_save(cfg, clean_table, smoke=True, sites=["smlp.a"])
+    assert len(rep.entries) == 1
+    (key, entry), = rep.entries.items()
+    res, = rep.results
+    assert res.winner in res.ranked[:2]       # smoke: top_k=2
+    assert entry.measured_us is not None and entry.measured_us > 0
+    assert entry.sparsity is not None
+    assert entry.sparsity != pytest.approx(0.80)   # measured, not s_s default
+    tb.reload()
+    _, site, op, impl, shape, packed = parse_key(key)
+    assert lookup(site, op, impl, shape, packed) == entry
+    assert _errors(audit_tuned_table(str(clean_table))) == []

@@ -166,3 +166,52 @@ def test_os_has_no_psum_traffic_property(mm):
 def test_latency_at_least_compute_property(mm, df):
     assert mm_latency_cycles(mm, df, DEFAULT_ARRAY) >= \
         compute_cycles(mm, df, DEFAULT_ARRAY)
+
+
+# ---------------------------------------------------------------------------
+# Degenerate-shape behavior: eq. 26-28 must stay well-defined when a
+# workload generator emits a zero-sized dim (empty batch, pruned head).
+# ---------------------------------------------------------------------------
+
+def _degenerate():
+    return MMOp("degen", "FP", B=0, C=128, K=-1)
+
+
+def test_degenerate_mm_clamps_not_crashes(caplog):
+    """A zero/negative dim clamps to 1 (warned once), never a zero or
+    negative cycle count that would rank the op as free."""
+    import logging
+
+    from repro.core.energy import dataflow as df_mod
+
+    df_mod._WARNED_DEGENERATE.clear()
+    with caplog.at_level(logging.WARNING, logger=df_mod.__name__):
+        for df in ALL_DATAFLOWS:
+            assert mm_latency_cycles(_degenerate(), df, DEFAULT_ARRAY) > 0
+            assert compute_cycles(_degenerate(), df, DEFAULT_ARRAY) > 0
+            u = utilization(_degenerate(), df, DEFAULT_ARRAY)
+            assert 0.0 < u <= 1.0
+    warned = [r for r in caplog.records if "degenerate MM shape" in r.message]
+    assert len(warned) == 1            # once per shape, not per dataflow
+
+
+def test_degenerate_mm_does_not_skew_best_dataflow():
+    """best_dataflow over a mixed list ranks by the real ops; the clamped
+    degenerate op contributes epsilon cycles, not zero or NaN."""
+    from repro.core.energy.dataflow import best_dataflow
+
+    real = MMOp("real", "FP", B=256, C=256, K=256)
+    assert best_dataflow([real, _degenerate()]).name == \
+        best_dataflow([real]).name
+
+
+def test_healthy_shapes_do_not_warn(caplog):
+    import logging
+
+    from repro.core.energy import dataflow as df_mod
+
+    with caplog.at_level(logging.WARNING, logger=df_mod.__name__):
+        mm_latency_cycles(MMOp("ok", "FP", 64, 64, 64), ALL_DATAFLOWS[0],
+                          DEFAULT_ARRAY)
+    assert not [r for r in caplog.records
+                if "degenerate MM shape" in r.message]
