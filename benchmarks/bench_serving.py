@@ -9,7 +9,11 @@ continuous-batching :class:`ServingEngine` on a reduced spiking
 * slot occupancy — fraction of slot-steps that served a live request
   (the old wave engine scored ~1/slots here on skewed loads);
 * request latency — p50/p99 submit-to-finish, in engine steps and seconds;
-* accounting — done / rejected / expired counts (nothing drops silently).
+* accounting — done / rejected / expired / evicted / faulted counts
+  (nothing drops silently); quarantined (``faulted``) requests get one
+  clean resubmission, reported as ``requests_retried``. The counters are
+  zero in a healthy run — they go live under an injected fault schedule
+  (``CHAOS_SCHEDULE``, see docs/RESILIENCE.md).
 
 Emits the same ``metric,value`` CSV blocks as the other benchmarks, so
 ``benchmarks/run.py`` includes it as the ``serving`` section. Standalone:
@@ -101,11 +105,28 @@ def run(smoke: bool = False, *, slots: int | None = None,
             raise RuntimeError("serving bench failed to drain")
     wall = time.perf_counter() - t0
 
+    # One retry round for quarantined requests: a numeric fault is
+    # slot-local (the engine flushed the slot), so a clean resubmission
+    # of the same prompt is expected to finish.
+    retried = 0
+    if engine.faulted:
+        from repro.serving.scheduler import Request
+        for bad in list(engine.faulted):
+            if engine.submit(Request(uid=1_000_000 + bad.uid,
+                                     prompt=list(bad.prompt),
+                                     max_new_tokens=bad.max_new_tokens)):
+                retried += 1
+            n_submitted += 1
+        while engine.sched.has_work():
+            engine.step()
+
     lat = [r.latency_steps for r in engine.finished]
     p50, p99 = (np.percentile(lat, [50, 99]) if lat else (0.0, 0.0))
     sec_per_step = wall / max(1, engine.step_count)
     done = len(engine.finished)
-    assert done + len(engine.rejected) + len(engine.expired) == n_submitted
+    assert done + len(engine.rejected) + len(engine.expired) + \
+        len(engine.evicted) + len(engine.faulted) == n_submitted, \
+        "serving accounting broke: a request was dropped silently"
     return [
         "metric,value",
         f"slots,{slots}",
@@ -115,6 +136,9 @@ def run(smoke: bool = False, *, slots: int | None = None,
         f"requests_done,{done}",
         f"requests_rejected,{len(engine.rejected)}",
         f"requests_expired,{len(engine.expired)}",
+        f"requests_evicted,{len(engine.evicted)}",
+        f"requests_faulted,{len(engine.faulted)}",
+        f"requests_retried,{retried}",
         f"tokens_generated,{engine.generated_tokens}",
         f"engine_steps,{engine.step_count}",
         f"compile_seconds,{compile_s:.3f}",
@@ -142,12 +166,20 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
+    # Explicit opt-in fault injection (same contract as launch.train):
+    # CHAOS_SCHEDULE activates a seeded schedule, nothing else does.
+    from repro.chaos.inject import activate_from_env
+    injector = activate_from_env()
+
     t0 = time.perf_counter()
     lines = run(smoke=args.smoke, slots=args.slots, rate=args.rate,
                 horizon=args.horizon, seed=args.seed)
     dt = time.perf_counter() - t0
     print(f"== serving ({dt:.1f}s) ==")
     print("\n".join(lines))
+    if injector is not None:
+        for event in injector.events:
+            print(f"chaos_event,{event}")
     if args.json:
         from benchmarks.run import parse_section
         section = parse_section(lines)

@@ -41,7 +41,7 @@ from typing import Iterable, Mapping, Sequence
 
 from repro.analysis.report import Finding, error, info, warning
 
-__all__ = ["audit_mesh_plans", "audit_serving_caches",
+__all__ = ["audit_breaker", "audit_mesh_plans", "audit_serving_caches",
            "audit_spikingformer_plans", "audit_tuned_table",
            "fused_site_geometries", "run_audit"]
 
@@ -362,13 +362,29 @@ def audit_mesh_plans(presets: Sequence[str] | None = None,
     return findings
 
 
+def audit_breaker() -> list[Finding]:
+    """Report every circuit-breaker trip in this process
+    (``audit.breaker``) — warnings: a tripped site means a registered impl
+    raised at dispatch and the run silently-but-loggedly served the jnp
+    reference there. Empty (and a fresh CI process always is) when no site
+    tripped; in-process audits after a training/serving run surface the
+    demotions here next to the plan findings."""
+    from repro.core.policy import breaker_trips
+
+    return [warning("audit.breaker", site,
+                    f"impl {t.impl!r} (op {t.op}) tripped -> {t.fallback!r}: "
+                    f"{t.error}")
+            for site, t in sorted(breaker_trips().items())]
+
+
 def run_audit(*, batch: int = 1,
               presets: Sequence[str] | None = None,
               policies: Mapping[str, object] | None = None,
               arch_names: Sequence[str] | None = None) -> list[Finding]:
     """The full static audit (plans + serving caches + tuned table +
-    mesh renders)."""
+    mesh renders + any in-process circuit-breaker trips)."""
     return (audit_spikingformer_plans(presets, policies, batch=batch)
             + audit_serving_caches(arch_names)
             + audit_tuned_table()
-            + audit_mesh_plans(presets))
+            + audit_mesh_plans(presets)
+            + audit_breaker())

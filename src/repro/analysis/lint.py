@@ -22,6 +22,14 @@ Every rule encodes a hazard this repo has actually shipped (and fixed):
 * **E2A005** — a ``DeprecationWarning`` emitted without an explicit
   ``stacklevel``: the warning then points at repro internals instead of
   the user's call site (the shim tests pin this contract).
+* **E2A006** — a fault-swallowing handler: bare ``except:`` (which also
+  eats ``KeyboardInterrupt``/``SystemExit``), or a broad
+  ``except Exception:``/``except BaseException:`` whose body is pure
+  no-op (``pass``/``...``/``continue``). The chaos suite
+  (docs/RESILIENCE.md) exists because swallowed faults turn injected
+  failures — and real ones — into silent corruption; handle, narrow,
+  or re-raise. A deliberate swallow takes the allowlist comment and
+  thereby documents itself.
 
 Findings are suppressed per line with ``# e2a: ignore[E2A001]`` (comma
 lists allowed; bare ``# e2a: ignore`` silences every rule) on the flagged
@@ -50,6 +58,8 @@ RULES: dict[str, str] = {
     "E2A004": "unhashable literal passed in a static_argnums/"
               "static_argnames slot of a jitted function",
     "E2A005": "DeprecationWarning without an explicit stacklevel",
+    "E2A006": "fault-swallowing handler: bare except, or broad "
+              "except Exception/BaseException with a no-op body",
 }
 
 _IGNORE_RE = re.compile(r"#\s*e2a:\s*ignore(?:\[([A-Z0-9,\s]+)\])?")
@@ -314,12 +324,56 @@ def _rule_e2a005(tree: ast.AST) -> Iterator[tuple[int, str]]:
                 "call site")
 
 
+# -- E2A006 ------------------------------------------------------------------
+
+def _broad_catch(handler: ast.ExceptHandler) -> str | None:
+    """'bare' for ``except:``, the class name for a handler that catches
+    Exception/BaseException (directly or inside a tuple), else None."""
+    if handler.type is None:
+        return "bare"
+    elts = handler.type.elts if isinstance(handler.type, ast.Tuple) \
+        else [handler.type]
+    for e in elts:
+        if _unparse(e) in ("Exception", "BaseException"):
+            return _unparse(e)
+    return None
+
+
+def _noop_body(handler: ast.ExceptHandler) -> bool:
+    """True when the handler does nothing: only pass/.../continue (a
+    docstring-style constant expression counts as nothing too)."""
+    return all(
+        isinstance(s, (ast.Pass, ast.Continue)) or
+        (isinstance(s, ast.Expr) and isinstance(s.value, ast.Constant))
+        for s in handler.body)
+
+
+def _rule_e2a006(tree: ast.AST) -> Iterator[tuple[int, str]]:
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.ExceptHandler):
+            continue
+        broad = _broad_catch(node)
+        if broad == "bare":
+            yield node.lineno, (
+                "bare 'except:' swallows every signal including "
+                "KeyboardInterrupt and SystemExit — catch a concrete "
+                "exception type (or at most 'except Exception:' with real "
+                "handling)")
+        elif broad is not None and _noop_body(node):
+            yield node.lineno, (
+                f"'except {broad}: pass' silently swallows faults — the "
+                f"failure (or an injected chaos fault) disappears instead "
+                f"of being handled, narrowed, or re-raised; if the swallow "
+                f"is deliberate, say so with # e2a: ignore[E2A006]")
+
+
 _RULE_FNS = {
     "E2A001": _rule_e2a001,
     "E2A002": _rule_e2a002,
     "E2A003": _rule_e2a003,
     "E2A004": _rule_e2a004,
     "E2A005": _rule_e2a005,
+    "E2A006": _rule_e2a006,
 }
 
 

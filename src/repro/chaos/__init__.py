@@ -1,0 +1,24 @@
+"""Deterministic fault injection for the whole stack (docs/RESILIENCE.md).
+
+``repro.chaos`` is the seeded chaos harness the guardrails are tested
+against: a serializable :class:`FaultSchedule` names *what* fails and
+*when* (scopes ``chaos.step``, ``chaos.grad``, ``chaos.kernel.<site>``,
+``chaos.ckpt``, ``chaos.serving.slot``), an :class:`ChaosInjector`
+activates it process-wide, and :mod:`repro.chaos.runner` drives an
+end-to-end train run under the schedule with orchestrator-style
+restart-on-failure.
+
+Injection is **opt-in only**: every hook is a no-op unless a schedule was
+explicitly activated (programmatically or via the ``CHAOS_SCHEDULE``
+env var), so production paths pay a single ``is None`` check.
+"""
+from repro.chaos.inject import (ChaosInjector, ChaosKernelFault,
+                                ChaosStepFault, activate, activate_from_env,
+                                active, chaos, deactivate)
+from repro.chaos.schedule import SCOPES, FaultSchedule, FaultSpec
+
+__all__ = [
+    "ChaosInjector", "ChaosKernelFault", "ChaosStepFault", "FaultSchedule",
+    "FaultSpec", "SCOPES", "activate", "activate_from_env", "active",
+    "chaos", "deactivate",
+]

@@ -251,8 +251,9 @@ def lif_scan(x_seq: jax.Array, cfg: LIFConfig, site: str = "lif") -> jax.Array:
         from repro.core.policy import runtime_fallback
         runtime_fallback(site, "lif_state",
                          f"T={t} % time_chunk={tc} != 0 -> single-shot scan")
-    return get_kernel("lif", cfg.policy.resolve(site, "lif"))(x_seq, cfg,
-                                                              site)
+    from repro.core.policy import dispatch_kernel
+    return dispatch_kernel(site, "lif", cfg.policy.resolve(site, "lif"),
+                           x_seq, cfg, site)
 
 
 @partial(jax.jit, static_argnames=("cfg", "site"))
@@ -264,7 +265,12 @@ def lif_scan_with_state(x_seq: jax.Array, u0: jax.Array, s0: jax.Array,
     chunk-by-chunk application matches a single :func:`lif_scan` exactly.
     """
     impl = cfg.policy.resolve(site, "lif_state")
-    return _lif_state_kernel(impl, site)(x_seq, u0, s0, cfg, site)
+    from repro.core.policy import dispatch_site
+    return dispatch_site(
+        site, "lif_state", impl,
+        lambda: _lif_state_kernel(impl, site)(x_seq, u0, s0, cfg, site),
+        fallback_impl="jnp",
+        fallback_invoke=lambda: _lif_state_jnp(x_seq, u0, s0, cfg, site))
 
 
 def lif_decode_step(x: jax.Array, u0: jax.Array, s0: jax.Array,

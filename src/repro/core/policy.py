@@ -348,6 +348,113 @@ def runtime_fallback(site: str, impl: str, reason: str,
 
 
 # ---------------------------------------------------------------------------
+# Per-site circuit breaker (guarded dispatch)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BreakerTrip:
+    """Record of one tripped dispatch site: which impl raised, what it was
+    demoted to, and the stringified error that tripped it."""
+
+    site: str
+    op: str
+    impl: str
+    fallback: str
+    error: str
+
+
+#: site -> trip record. Module-global on purpose: a tripped site stays
+#: demoted for the rest of the process (every retrace, every restart of the
+#: train loop in-process), exactly like ``_reported_fallbacks``.
+_BREAKER_TRIPS: dict[str, BreakerTrip] = {}
+
+
+def breaker_trips() -> dict[str, BreakerTrip]:
+    """Snapshot of every tripped site (empty in a healthy process)."""
+    return dict(_BREAKER_TRIPS)
+
+
+def reset_breaker() -> None:
+    """Clear all trips (tests / explicit operator reset)."""
+    _BREAKER_TRIPS.clear()
+
+
+def describe_breaker() -> str:
+    """Render the tripped-site table (one line per site; empty string when
+    nothing tripped). Appended to ``describe_execution`` output."""
+    if not _BREAKER_TRIPS:
+        return ""
+    lines = ["# circuit breaker: demoted sites",
+             "site,op,impl,fallback,error"]
+    for site in sorted(_BREAKER_TRIPS):
+        t = _BREAKER_TRIPS[site]
+        lines.append(f"{t.site},{t.op},{t.impl},{t.fallback},"
+                     f"{t.error.splitlines()[0] if t.error else ''}")
+    return "\n".join(lines)
+
+
+def dispatch_site(site: str, op: str, impl: str, invoke: Callable[[], Any],
+                  *, fallback_impl: str | None = None,
+                  fallback_invoke: Callable[[], Any] | None = None) -> Any:
+    """Run ``invoke()`` (the resolved impl for ``site``) behind the per-site
+    circuit breaker.
+
+    If the impl raises at dispatch time (Pallas lowering bug, injected
+    ``chaos.kernel.<site>`` fault, ...), the site trips: the error is
+    logged once, recorded in :func:`breaker_trips` (surfaced by
+    ``describe_execution`` and the plan audit), and ``fallback_invoke()`` —
+    the jnp reference path for the site — serves this call and every later
+    one. With no distinct fallback (the reference impl is already the one
+    raising) the error propagates: there is nothing safe to demote to.
+
+    Dispatch runs at trace time (the impls build jax expressions), so a
+    plain ``try/except`` is sufficient — no in-jit error plumbing — and a
+    trip can only affect traces that have not been cached yet; a fault that
+    first manifests *after* a site's trace is cached would surface as a
+    runtime error instead, which no breaker can absorb.
+
+    ``fallback_invoke`` exists separately from ``fallback_impl`` because a
+    demotion can change the calling convention (the fused-epilogue
+    megakernel absorbs the trailing LIF; its fallback is the multi-launch
+    pipeline, not a same-signature impl swap) — the call site supplies a
+    thunk that knows how to run its own reference path.
+    """
+    from repro.chaos import inject as _chaos_inject
+    guarded = (fallback_invoke is not None and fallback_impl is not None
+               and fallback_impl != impl)
+    if guarded and site in _BREAKER_TRIPS:
+        return fallback_invoke()
+    try:
+        _chaos_inject.kernel_fault(site)
+        return invoke()
+    except (KeyboardInterrupt, SystemExit):
+        raise
+    except Exception as e:
+        if not guarded:
+            raise
+        _BREAKER_TRIPS[site] = BreakerTrip(
+            site, op, impl, fallback_impl, f"{type(e).__name__}: {e}")
+        logger.warning(
+            "circuit breaker: site %s impl %r raised at dispatch "
+            "(%s: %s) — demoted to %r for the rest of the run",
+            site, impl, type(e).__name__, e, fallback_impl)
+        return fallback_invoke()
+
+
+def dispatch_kernel(site: str, op: str, impl: str, *args: Any) -> Any:
+    """Convenience guarded dispatch for the common case where the jnp
+    reference impl shares the impl's signature: resolves both through the
+    registry and calls with ``*args``."""
+    ref = default_impl(op, "jnp")
+    return dispatch_site(
+        site, op, impl,
+        lambda: get_kernel(op, impl)(*args),
+        fallback_impl=ref,
+        fallback_invoke=(None if impl == ref
+                         else lambda: get_kernel(op, ref)(*args)))
+
+
+# ---------------------------------------------------------------------------
 # Kernel registry
 # ---------------------------------------------------------------------------
 
@@ -602,11 +709,13 @@ def apply_legacy_exec_flags(cfg: Any, backend: str | None,
 
 
 __all__ = [
-    "BACKENDS", "ExecutionPolicy", "FUSED_EPILOGUE_IMPLS", "NAMED_POLICIES",
-    "OPS", "SiteDecision", "apply_legacy_exec_flags", "available_impls",
-    "default_impl", "default_policy", "fused_epilogue_fallback", "get_kernel",
-    "known_site_keys", "list_named_policies", "log_fallbacks", "named_policy",
+    "BACKENDS", "BreakerTrip", "ExecutionPolicy", "FUSED_EPILOGUE_IMPLS",
+    "NAMED_POLICIES", "OPS", "SiteDecision", "apply_legacy_exec_flags",
+    "available_impls", "breaker_trips", "default_impl", "default_policy",
+    "describe_breaker", "dispatch_kernel", "dispatch_site",
+    "fused_epilogue_fallback", "get_kernel", "known_site_keys",
+    "list_named_policies", "log_fallbacks", "named_policy",
     "packed_fallback", "plan_sites", "policy_from_flags", "register_kernel",
-    "register_site_table", "runtime_fallback", "site_tables",
-    "unregister_kernel", "warn_deprecated_flags",
+    "register_site_table", "reset_breaker", "runtime_fallback",
+    "site_tables", "unregister_kernel", "warn_deprecated_flags",
 ]

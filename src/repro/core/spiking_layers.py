@@ -30,9 +30,9 @@ from jax.sharding import PartitionSpec as P
 from repro.core.backend import fold_rows, fold_time_major
 from repro.core.lif import LIFConfig, lif_scan
 from repro.core.policy import (ExecutionPolicy, FUSED_EPILOGUE_IMPLS,
-                               apply_legacy_exec_flags,
-                               fused_epilogue_fallback, get_kernel,
-                               policy_from_flags, register_kernel,
+                               apply_legacy_exec_flags, dispatch_kernel,
+                               dispatch_site, fused_epilogue_fallback,
+                               get_kernel, policy_from_flags, register_kernel,
                                runtime_fallback)
 from repro.models.common import BATCH, MODEL, shard
 from repro.tune.table import lookup as tuned_lookup
@@ -131,8 +131,8 @@ def bn_apply(params: Params, state: State, x: jax.Array, *, train: bool,
     policy = _legacy_policy(policy, backend, None, interpret,
                             "bn_apply(backend=/interpret=)")
     impl = policy.resolve(site, "bn")
-    return get_kernel("bn", impl)(params, state, x, train, momentum, eps,
-                                  policy, site)
+    return dispatch_kernel(site, "bn", impl, params, state, x, train,
+                           momentum, eps, policy, site)
 
 
 # ---------------------------------------------------------------------------
@@ -332,8 +332,8 @@ def linear_bn_apply(params: Params, state: State, x: jax.Array, *,
         runtime_fallback(site, impl, f"no trailing LIF at this site -> {fb}",
                          expected=True)
         impl = fb
-    return get_kernel("linear_bn", impl)(params, state, x, train, policy,
-                                         site)
+    return dispatch_kernel(site, "linear_bn", impl, params, state, x, train,
+                           policy, site)
 
 
 def linear_bn_lif_apply(params: Params, state: State, x: jax.Array,
@@ -371,17 +371,28 @@ def linear_bn_lif_apply(params: Params, state: State, x: jax.Array,
         if _tuned_prefers_pipeline(site, "linear_bn", impl, x3shape,
                                    x.shape[-1] % 8 == 0, policy):
             impl = fused_epilogue_fallback("linear_bn", impl)
-    if impl in FUSED_EPILOGUE_IMPLS:
-        spikes, st = get_kernel("linear_bn", impl)(params, state, x, lif_cfg,
-                                                   train, policy, site)
+    def _pipeline(pipe_impl):
+        y, st = dispatch_kernel(site, "linear_bn", pipe_impl, params, state,
+                                x, train, policy, site)
         if act_spec is not None:
-            spikes = shard(spikes, *act_spec)
-        return spikes, st
-    y, st = get_kernel("linear_bn", impl)(params, state, x, train, policy,
-                                          site)
-    if act_spec is not None:
-        y = shard(y, *act_spec)
-    return lif_scan(y, lif_cfg, site=lif_site), st
+            y = shard(y, *act_spec)
+        return lif_scan(y, lif_cfg, site=lif_site), st
+
+    if impl in FUSED_EPILOGUE_IMPLS:
+        # The megakernel's circuit-breaker fallback is the full reference
+        # *pipeline* (jnp linear_bn + lif_scan), not a same-signature impl
+        # swap — the fused impl absorbed the trailing LIF.
+        def _fused():
+            spikes, st = get_kernel("linear_bn", impl)(
+                params, state, x, lif_cfg, train, policy, site)
+            if act_spec is not None:
+                spikes = shard(spikes, *act_spec)
+            return spikes, st
+
+        return dispatch_site(site, "linear_bn", impl, _fused,
+                             fallback_impl="jnp",
+                             fallback_invoke=lambda: _pipeline("jnp"))
+    return _pipeline(impl)
 
 
 # ---------------------------------------------------------------------------
@@ -524,11 +535,13 @@ def pssa_apply(params: Params, state: State, x: jax.Array, cfg: PSSAConfig,
 
     qh, kh, vh = (_split_heads(a, cfg.n_heads) for a in (qs, ks, vs))
     if cfg.qk_first:
-        attn = get_kernel("attn_qk", pol.resolve("attn_qk", "attn_qk"))(
-            qh, kh, pol, "attn_qk")                              # spike counts
+        attn = dispatch_kernel("attn_qk", "attn_qk",
+                               pol.resolve("attn_qk", "attn_qk"),
+                               qh, kh, pol, "attn_qk")           # spike counts
         attn = shard(attn, *ACT_SPECS["attn.scores"])
-        out = get_kernel("attn_av", pol.resolve("attn_av", "attn_av"))(
-            attn, vh, pol, "attn_av")
+        out = dispatch_kernel("attn_av", "attn_av",
+                              pol.resolve("attn_av", "attn_av"),
+                              attn, vh, pol, "attn_av")
     else:  # exact reassociation (no softmax): K^T V first — kv is dense
         kv = jnp.einsum("tbhmd,tbhme->tbhde", kh, vh)
         out = jnp.einsum("tbhnd,tbhde->tbhne", qh, kv)

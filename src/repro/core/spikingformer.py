@@ -231,11 +231,15 @@ class SpikingFormerConfig:
         partition specs the model constrains to, and — when ``mesh`` is
         given — the effective parameter shardings (post sanitize + FSDP)
         on that mesh."""
+        from repro.core.policy import describe_breaker
         from repro.tune.table import describe_tuned
 
         rows = self.execution_plan()
         out = self.policy.describe(rows=rows)
         tuned = describe_tuned([r.site for r in rows])
+        breaker = describe_breaker()
+        if breaker:
+            out = out + "\n\n" + breaker
         return out + "\n\n" + tuned + "\n\n" + self.describe_sharding(mesh)
 
     def describe_sharding(self, mesh=None) -> str:
@@ -603,9 +607,11 @@ def tokenizer_apply(params, state, images, cfg: SpikingFormerConfig, *,
     new_states = []
     for i, (p, s) in enumerate(zip(params, state)):
         site = f"tokenizer.conv.{i}"
-        conv = get_kernel("conv", pol.resolve(site, "conv"))
+        from repro.core.policy import dispatch_kernel
         x = shard(x, None, BATCH, None, None, None)
-        x, s_new = conv(p, s, x, cfg.lif_cfg, train, spike_in, pol, site)
+        x, s_new = dispatch_kernel(site, "conv", pol.resolve(site, "conv"),
+                                   p, s, x, cfg.lif_cfg, train, spike_in,
+                                   pol, site)
         new_states.append(s_new)
         spike_in = True                        # LIF output feeds stage i+1
     t, b = x.shape[:2]

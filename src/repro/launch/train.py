@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.chaos import inject as chaos_inject
 from repro.configs.registry import get_config, reduced
 from repro.launch.mesh import (apply_fsdp, batch_axes, make_test_mesh,
                                sanitize_specs, use_mesh)
@@ -31,7 +32,8 @@ from repro.train.data import (DataConfig, SyntheticLM, SyntheticVision,
                               VisionDataConfig, place_batch)
 from repro.train.loop import make_train_step
 from repro.train.optimizer import OptimizerConfig, init_opt_state
-from repro.train.resilience import PreemptionGuard, StragglerMonitor
+from repro.train.resilience import (NonFiniteGuard, PreemptionGuard,
+                                    StragglerMonitor)
 
 
 def build_state(cfg, mesh, opt_cfg, seed: int = 0):
@@ -82,29 +84,46 @@ def build_spikingformer_state(cfg, mesh, opt_cfg, seed: int = 0,
 
 
 def _drive(mesh, *, start: int, steps: int, step_once, save, log_line,
-           log_every: int, ckpt_every: int, ckpt_dir: str | None):
+           log_every: int, ckpt_every: int, ckpt_dir: str | None,
+           nonfinite_budget: int = 3, final_join_timeout: float = 120.0):
     """Shared driver scaffolding for every family: straggler monitor,
-    preemption guard, checkpoint cadence, and the final async-save join
-    (the last write must land before a restart scans ``latest_step``).
+    preemption guard, non-finite skip budget, checkpoint cadence, and the
+    final async-save join (the last write must land before a restart scans
+    the checkpoint directory).
 
     ``step_once(step) -> metrics`` advances the caller's model state (held
     in a closure); ``save(step)`` persists it, returning the writer thread
     when asynchronous; ``log_line(step, metrics)`` formats the progress
     line. Returns the per-step loss history.
+
+    The step factory's in-jit guard reports skipped steps via
+    ``metrics["nonfinite"]``; more than ``nonfinite_budget`` consecutive
+    skips raise ``NonFiniteBudgetExceeded``. A final writer still alive
+    after ``final_join_timeout`` seconds raises
+    ``ckpt.CheckpointWriteTimeout`` so orchestrators see a nonzero exit
+    instead of a scrolled-past warning.
     """
     monitor = StragglerMonitor(
         on_straggler=lambda dt, med: print(
             f"[straggler] step took {dt:.3f}s (median {med:.3f}s)"))
     guard = PreemptionGuard().install()
+    nf_guard = NonFiniteGuard(budget=nonfinite_budget)
     history = []
     pending_save = None
 
     with use_mesh(mesh):
         for step in range(start, steps):
+            chaos_inject.step_fault(step)
             monitor.step_start()
             metrics = step_once(step)
             monitor.step_end()
             history.append(float(metrics["loss"]))
+            if nf_guard.observe(float(metrics.get("nonfinite", 0.0)) > 0.0,
+                                step):
+                print(f"[guard] step {step} non-finite loss/grads — state "
+                      f"unchanged, step skipped "
+                      f"({nf_guard.consecutive}/{nf_guard.budget} "
+                      f"consecutive)", flush=True)
             if step % log_every == 0 or step == steps - 1:
                 print(log_line(step, metrics), flush=True)
             if ckpt_dir and ((step + 1) % ckpt_every == 0
@@ -114,11 +133,12 @@ def _drive(mesh, *, start: int, steps: int, step_once, save, log_line,
                     print("[preempt] checkpoint saved, exiting")
                     break
     if pending_save is not None:
-        pending_save.join(timeout=120)
+        pending_save.join(timeout=final_join_timeout)
         if pending_save.is_alive():
-            print("[ckpt] WARNING: final async checkpoint write still "
-                  "running after 120s — a restart may resume from an "
-                  "older step", flush=True)
+            raise ckpt.CheckpointWriteTimeout(
+                f"final async checkpoint write still running after "
+                f"{final_join_timeout:.0f}s — the run's last state may not "
+                f"be on disk; a restart would resume from an older step")
     return history
 
 
@@ -142,14 +162,13 @@ def train_vision(cfg, *, steps: int, global_batch: int,
 
     start = 0
     if ckpt_dir:
-        latest = ckpt.latest_step(ckpt_dir)
+        tree = {"params": params, "state": state, "opt": opt_state}
+        latest, restored = ckpt.restore_latest_good(ckpt_dir, tree, mesh,
+                                                    specs)
         if latest is not None:
             print(f"[restore] step {latest} from {ckpt_dir}")
-            tree = {"params": params, "state": state, "opt": opt_state}
-            tree = ckpt.restore_checkpoint(ckpt_dir, latest, tree, mesh,
-                                           specs)
-            params, state, opt_state = (tree["params"], tree["state"],
-                                        tree["opt"])
+            params, state, opt_state = (restored["params"],
+                                        restored["state"], restored["opt"])
             start = latest
 
     data = SyntheticVision(VisionDataConfig(
@@ -162,7 +181,8 @@ def train_vision(cfg, *, steps: int, global_batch: int,
 
     def step_once(step):
         nonlocal params, state, opt_state
-        batch = place_batch(data.batch(step), mesh)
+        batch = place_batch(
+            chaos_inject.poison_batch(data.batch(step), step), mesh)
         params, state, opt_state, metrics = jit_step(
             params, state, opt_state, batch["images"], batch["labels"])
         return metrics
@@ -205,11 +225,11 @@ def train(cfg, *, steps: int, global_batch: int, seq_len: int = 128,
 
     start = 0
     if ckpt_dir:
-        latest = ckpt.latest_step(ckpt_dir)
+        latest, restored = ckpt.restore_latest_good(ckpt_dir, params, mesh,
+                                                    specs)
         if latest is not None:
             print(f"[restore] step {latest} from {ckpt_dir}")
-            params = ckpt.restore_checkpoint(ckpt_dir, latest, params, mesh,
-                                             specs)
+            params = restored
             start = latest
 
     data = SyntheticLM(DataConfig(
@@ -220,7 +240,8 @@ def train(cfg, *, steps: int, global_batch: int, seq_len: int = 128,
 
     def step_once(step):
         nonlocal params, opt_state
-        batch = place_batch(data.batch(step), mesh)
+        batch = place_batch(
+            chaos_inject.poison_batch(data.batch(step), step), mesh)
         if cfg.family == "audio":
             bsz = batch["tokens"].shape[0]
             batch["frames"] = jnp.zeros(
@@ -298,7 +319,19 @@ def main() -> None:
                     help="execution policy preset for spikingformer archs")
     ap.add_argument("--time-chunk", type=int, default=None,
                     help="temporal tile length for spikingformer BPTT")
+    ap.add_argument("--chaos-schedule", default=None,
+                    help="fault-injection schedule (JSON file or inline "
+                         "JSON; also honored via $CHAOS_SCHEDULE). See "
+                         "docs/RESILIENCE.md")
     args = ap.parse_args()
+    if args.chaos_schedule:
+        from repro.chaos import FaultSchedule, activate
+        import os as _os
+        activate(FaultSchedule.from_file(args.chaos_schedule)
+                 if _os.path.exists(args.chaos_schedule)
+                 else FaultSchedule.from_json(args.chaos_schedule))
+    else:
+        chaos_inject.activate_from_env()
     cfg = _resolve_config(args)
     _, history = train(cfg, steps=args.steps, global_batch=args.batch,
                        seq_len=args.seq if args.seq is not None else 128,

@@ -24,6 +24,11 @@ wave. This engine replaces that with continuous batching:
 * **Scheduler.** A FIFO queue + slot map (``serving.scheduler``) with
   per-request deadlines, max-token budgets, and explicit (never silent)
   over-capacity rejection.
+* **Slot quarantine.** Non-finite logits in a slot (docs/RESILIENCE.md)
+  finish that request with the explicit ``faulted``/``numeric_fault``
+  status, evict it, and flush the slot state to init — one bad slot never
+  poisons its neighbours or the next occupant, and the single-trace
+  contract is preserved (the flush reuses the eviction reset jit).
 
 Greedy (temperature=0) decode of a slot matches serving the request alone —
 slot isolation is proven token-for-token (up to float-tie tolerance: the
@@ -41,6 +46,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.analysis.tracing import trace_count
+from repro.chaos import inject as chaos_inject
 from repro.configs.base import ArchConfig
 from repro.models.lm import (cache_slot_state, init_cache, lm_decode_step,
                              reset_cache_slots)
@@ -73,6 +79,10 @@ class ServingEngine:
         self.rejected: list[Request] = []
         self.expired: list[Request] = []
         self.evicted: list[Request] = []
+        #: Requests quarantined for non-finite logits (status "faulted",
+        #: reason "numeric_fault") — the slot was evicted and its state
+        #: flushed to init; the engine itself keeps serving.
+        self.faulted: list[Request] = []
 
         # Device-resident persistent state: created once, never rebuilt.
         self.cache = init_cache(cfg, slots, max_seq, cache_dtype)
@@ -164,10 +174,20 @@ class ServingEngine:
         # numpy buffer while dispatch is async, and the bookkeeping below
         # mutates _next_tok/_pos in place — handing jax the live arrays
         # races the in-flight launch (nondeterministic logits under load).
-        logits, self.cache = self._step(self.params, self.cache,
-                                        jnp.asarray(self._next_tok.copy()),
-                                        jnp.asarray(self._pos.copy()),
-                                        jnp.asarray(reset_mask))
+        try:
+            logits, self.cache = self._step(self.params, self.cache,
+                                            jnp.asarray(self._next_tok.copy()),
+                                            jnp.asarray(self._pos.copy()),
+                                            jnp.asarray(reset_mask))
+        except BaseException:
+            # Failure atomicity: the launch consumed nothing (self.cache is
+            # unchanged) but the pending resets were already drained into
+            # reset_mask — put them back so a retried step re-applies them.
+            # Admitted slots keep their bookkeeping; the retry relaunches
+            # the identical step (step_count was not incremented).
+            self._pending_reset.update(
+                s for s in range(self.slots) if reset_mask[s])
+            raise
         self.step_count += 1
         lg = None   # fetched lazily: pure-prefill steps skip the transfer
         for slot, req in enumerate(self.sched.slot_map):
@@ -182,8 +202,12 @@ class ServingEngine:
                 self._prefill_idx[slot] += 1
                 continue
             if lg is None:
-                lg = np.asarray(logits)
-            tok = self._sample(lg[slot])
+                lg = chaos_inject.serving_fault(np.asarray(logits), now)
+            row = lg[slot]
+            if not np.all(np.isfinite(row)):
+                self._quarantine(slot, req)
+                continue
+            tok = self._sample(row)
             if req.first_token_step < 0:
                 req.first_token_step = self.step_count
             req.output.append(tok)
@@ -239,6 +263,20 @@ class ServingEngine:
         self._pos[slot] = 0
         self._next_tok[slot, 0] = 0
         self._prefill_idx[slot] = 0
+
+    def _quarantine(self, slot: int, req: Request) -> None:
+        """Non-finite logits in a slot (kernel bug, state corruption, an
+        injected ``chaos.serving.slot`` fault): evict the request with the
+        explicit ``numeric_fault`` status and flush the slot's state to
+        init *eagerly* — the corruption must not leak into the next
+        occupant. No retrace: the flush rides the same ``_reset`` jit
+        eviction uses, and the fused step's trace never changes."""
+        req.status, req.reason = "faulted", "numeric_fault"
+        req.finish_step = self.step_count
+        self.sched.release(slot)
+        self._clear_slot(slot)
+        self.flush_resets()
+        self.faulted.append(req)
 
     def _finish(self, slot: int, req: Request) -> None:
         req.done = True

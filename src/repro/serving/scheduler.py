@@ -5,8 +5,11 @@ the device-resident state. The contract the property tests pin down
 (``tests/test_serving_sched.py``):
 
 * **No silent drops.** Every submitted request reaches exactly one terminal
-  status — ``done``, ``expired``, ``evicted`` — or is *explicitly* rejected
-  at submit time (``rejected`` + a reason) when the queue is at capacity.
+  status — ``done``, ``expired``, ``evicted``, ``faulted`` — or is
+  *explicitly* rejected at submit time (``rejected`` + a reason) when the
+  queue is at capacity. The accounting invariant ``done + rejected +
+  expired + evicted + faulted == submitted`` holds even when the fused
+  launch itself raises mid-drain (the engine's step is failure-atomic).
 * **Slot exclusivity.** A slot holds at most one request at a time;
   double-booking or double-freeing raises :class:`SlotError` instead of
   corrupting neighbouring state.
@@ -34,7 +37,9 @@ class Request:
 
     ``status`` transitions: ``queued`` -> ``running`` -> ``done``; any
     non-terminal state may instead end ``expired`` (deadline) or
-    ``evicted`` (explicit cancel), and ``submit`` may end it ``rejected``.
+    ``evicted`` (explicit cancel), a running request may end ``faulted``
+    (non-finite logits in its slot, reason ``numeric_fault`` — the engine's
+    slot quarantine), and ``submit`` may end it ``rejected``.
     Step counters are engine step counts (-1 = not reached).
     """
 

@@ -1,10 +1,21 @@
-"""Fault-tolerant checkpointing with elastic restore.
+"""Fault-tolerant checkpointing with elastic restore and integrity checks.
 
 Format: one directory per step, one ``.npy`` per pytree leaf plus an
-``index.json`` with the tree structure and the *logical* sharding specs.
-Writes go to ``<dir>.tmp`` and are atomically renamed — a preempted save
-never corrupts the latest checkpoint. Saves can run asynchronously on a
-background thread; retention keeps the newest K steps.
+``index.json`` with the tree structure, per-leaf CRC32 checksums, and the
+*logical* sharding specs. Writes go to ``<dir>.tmp`` (every file fsync'd,
+``index.json`` written last, itself via temp+rename) and the directory is
+atomically renamed into place — a kill at ANY byte of a save leaves either
+the previous checkpoint set intact or the new step fully published, never
+a half-written directory that ``latest_step`` would consider restorable.
+Saves can run asynchronously on a background thread; retention keeps the
+newest K steps.
+
+Integrity: :func:`restore_checkpoint` re-checksums every leaf as it loads
+and raises :class:`CheckpointCorruptError` on a mismatch (bit rot, a
+truncated file, an injected ``chaos.ckpt`` fault);
+:func:`restore_latest_good` walks retained steps newest-first and falls
+back — with a warning — past any step that fails to restore, which is the
+entry point the training driver uses.
 
 Elastic restore: leaves are stored as full (unsharded) logical arrays, so a
 checkpoint written on one mesh can be restored onto ANY mesh — the saved
@@ -18,11 +29,43 @@ import json
 import os
 import shutil
 import threading
+import warnings
+import zlib
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.chaos import inject as _chaos
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A retained checkpoint failed its integrity check (CRC mismatch,
+    unreadable array file, missing leaf)."""
+
+    def __init__(self, step: int, detail: str):
+        super().__init__(f"checkpoint step {step} corrupt: {detail}")
+        self.step = step
+        self.detail = detail
+
+
+class CheckpointWriteTimeout(RuntimeError):
+    """The final async checkpoint writer did not finish within the join
+    timeout — the run's last state may not be on disk."""
+
+
+def _crc32(arr: np.ndarray) -> str:
+    return f"{zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF:08x}"
+
+
+def _fsync_write(path: str, write_fn) -> None:
+    """Write via ``write_fn(f)`` and fsync before close, so the atomic
+    directory rename cannot publish names whose bytes are still in flight."""
+    with open(path, "wb") as f:
+        write_fn(f)
+        f.flush()
+        os.fsync(f.fileno())
 
 
 def _flatten_with_paths(tree: Any, *, none_is_leaf: bool = False
@@ -49,9 +92,11 @@ def save_checkpoint(directory: str, step: int, tree: Any,
                     specs: Any | None = None, keep: int = 3,
                     async_save: bool = False) -> threading.Thread | None:
     """Atomically persist ``tree`` under ``directory/step_<N>``."""
-    # Materialize on host BEFORE handing to the writer thread (the device
-    # buffers may be donated to the next step).
-    host_leaves = [(name, np.asarray(jax.device_get(leaf)))
+    # Materialize on host BEFORE handing to the writer thread — and as a
+    # real copy: on CPU ``device_get`` can zero-copy alias the device
+    # buffer, which the next step's donation reuses while the async writer
+    # is still serializing it (detected as CRC/file divergence).
+    host_leaves = [(name, np.array(jax.device_get(leaf), copy=True))
                    for name, leaf in _flatten_with_paths(tree)]
     spec_map = {}
     if specs is not None:
@@ -62,19 +107,31 @@ def save_checkpoint(directory: str, step: int, tree: Any,
     def write():
         final = os.path.join(directory, f"step_{step:08d}")
         tmp = final + ".tmp"
-        os.makedirs(tmp, exist_ok=True)
+        if os.path.exists(tmp):
+            # A crashed earlier writer for this same step: start clean
+            # rather than merging stale leaf files into the new set.
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
         index = {"step": step, "leaves": {}, "specs": spec_map}
         for name, arr in host_leaves:
             fname = name.replace("/", "__") + ".npy"
-            np.save(os.path.join(tmp, fname), arr)
+            _fsync_write(os.path.join(tmp, fname),
+                         lambda f, a=arr: np.save(f, a))
             index["leaves"][name] = {"file": fname,
                                      "shape": list(arr.shape),
-                                     "dtype": str(arr.dtype)}
-        with open(os.path.join(tmp, "index.json"), "w") as f:
-            json.dump(index, f)
+                                     "dtype": str(arr.dtype),
+                                     "crc": _crc32(arr)}
+        # index.json last, via its own temp+rename: its presence implies
+        # every leaf file (and its checksum) is already durable.
+        ipath = os.path.join(tmp, "index.json")
+        _fsync_write(ipath + ".tmp",
+                     lambda f: f.write(json.dumps(index).encode()))
+        os.replace(ipath + ".tmp", ipath)
         if os.path.exists(final):
             shutil.rmtree(final)
         os.rename(tmp, final)                        # atomic publish
+        _fsync_dir(directory)
+        _chaos.ckpt_fault(final, step, "write")
         _apply_retention(directory, keep)
 
     if async_save:
@@ -83,6 +140,19 @@ def save_checkpoint(directory: str, step: int, tree: Any,
         return t
     write()
     return None
+
+
+def _fsync_dir(directory: str) -> None:
+    """Durable-ize a directory rename (no-op on platforms that cannot open
+    directories)."""
+    try:
+        fd = os.open(directory, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
 
 
 def _apply_retention(directory: str, keep: int) -> None:
@@ -100,6 +170,42 @@ def latest_step(directory: str) -> int | None:
     return max(steps) if steps else None
 
 
+def retained_steps(directory: str) -> list[int]:
+    """All published step numbers, ascending (empty when the directory does
+    not exist)."""
+    if not os.path.isdir(directory):
+        return []
+    return sorted(int(d.split("_")[1]) for d in os.listdir(directory)
+                  if d.startswith("step_") and not d.endswith(".tmp"))
+
+
+def verify_checkpoint(directory: str, step: int) -> list[str]:
+    """Integrity-check one retained step without building arrays on device.
+
+    Returns the list of bad leaf names (CRC mismatch, unreadable or missing
+    file) — empty means the step is restorable. Leaves written before
+    checksums existed (no ``crc`` entry) verify by loadability alone.
+    """
+    path = os.path.join(directory, f"step_{step:08d}")
+    _chaos.ckpt_fault(path, step, "read")
+    try:
+        with open(os.path.join(path, "index.json")) as f:
+            index = json.load(f)
+    except (OSError, ValueError):
+        return ["index.json"]
+    bad = []
+    for name, meta in index.get("leaves", {}).items():
+        try:
+            arr = np.load(os.path.join(path, meta["file"]))
+        except (OSError, ValueError, KeyError):
+            bad.append(name)
+            continue
+        crc = meta.get("crc")
+        if crc is not None and _crc32(arr) != crc:
+            bad.append(name)
+    return bad
+
+
 def restore_checkpoint(directory: str, step: int, like: Any,
                        mesh=None, specs: Any | None = None) -> Any:
     """Restore into the structure of ``like``. If a ``mesh`` is given,
@@ -112,6 +218,7 @@ def restore_checkpoint(directory: str, step: int, like: Any,
     from jax.sharding import NamedSharding, PartitionSpec as P
 
     path = os.path.join(directory, f"step_{step:08d}")
+    _chaos.ckpt_fault(path, step, "read")
     with open(os.path.join(path, "index.json")) as f:
         index = json.load(f)
 
@@ -124,7 +231,17 @@ def restore_checkpoint(directory: str, step: int, like: Any,
     loaded = []
     axis_names = set(mesh.axis_names) if mesh is not None else set()
     for name, _ in _flatten_with_paths(like):
-        arr = np.load(os.path.join(path, index["leaves"][name]["file"]))
+        meta = index["leaves"][name]
+        try:
+            arr = np.load(os.path.join(path, meta["file"]))
+        except (OSError, ValueError) as e:
+            raise CheckpointCorruptError(
+                step, f"leaf {name!r} unreadable: {e}") from None
+        crc = meta.get("crc")
+        if crc is not None and _crc32(arr) != crc:
+            raise CheckpointCorruptError(
+                step, f"leaf {name!r} CRC mismatch (stored {crc}, "
+                      f"loaded {_crc32(arr)})")
         spec = spec_map.get(name)
         if mesh is not None and spec is not None:
             def keep_ax(ax):
@@ -140,6 +257,34 @@ def restore_checkpoint(directory: str, step: int, like: Any,
             loaded.append(jnp.asarray(arr))
     tdef = jax.tree_util.tree_structure(like)
     return jax.tree_util.tree_unflatten(tdef, loaded)
+
+
+def restore_latest_good(directory: str, like: Any, mesh=None,
+                        specs: Any | None = None) -> tuple[int | None, Any]:
+    """Restore the newest retained step that passes integrity checks.
+
+    Walks retained steps newest-first; a step that fails (CRC mismatch,
+    truncated/missing file, unreadable index — anything
+    :func:`restore_checkpoint` raises for) is skipped with a warning and
+    the previous retained step is tried. Also sweeps dead ``*.tmp``
+    directories from crashed writers (safe here: a restore implies no save
+    is in flight). Returns ``(step, tree)``, or ``(None, None)`` when no
+    restorable checkpoint exists — the caller starts from scratch.
+    """
+    if os.path.isdir(directory):
+        for d in os.listdir(directory):
+            if d.startswith("step_") and d.endswith(".tmp"):
+                shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
+    for step in reversed(retained_steps(directory)):
+        try:
+            return step, restore_checkpoint(directory, step, like, mesh,
+                                            specs)
+        except (CheckpointCorruptError, OSError, ValueError, KeyError) as e:
+            warnings.warn(
+                f"checkpoint step {step} in {directory} failed to restore "
+                f"({e}); falling back to the previous retained step",
+                RuntimeWarning, stacklevel=2)
+    return None, None
 
 
 def reshape_moe_layout(w: np.ndarray, old_m: int, new_m: int,

@@ -30,8 +30,26 @@ def _loss_fn_for(cfg: ArchConfig) -> Callable:
     return lm_loss
 
 
+def _all_finite(loss, grads) -> jax.Array:
+    """Scalar bool: loss and every inexact grad leaf are fully finite.
+    Tree-reduced inside the jit, so the guard costs one fused reduction —
+    no host sync, no extra launch."""
+    finite = jnp.isfinite(loss).all()
+    for leaf in jax.tree.leaves(grads):
+        if jnp.issubdtype(jnp.asarray(leaf).dtype, jnp.inexact):
+            finite = finite & jnp.isfinite(leaf).all()
+    return finite
+
+
+def _select_tree(finite, new, old):
+    """``new`` where the step was finite, ``old`` (state unchanged)
+    otherwise — the in-jit skip: same trace either way."""
+    return jax.tree.map(lambda n, o: jnp.where(finite, n, o), new, old)
+
+
 def make_train_step(cfg: Any, opt_cfg: OptimizerConfig,
-                    microbatches: int = 1, *, mesh=None) -> Callable:
+                    microbatches: int = 1, *, mesh=None,
+                    guard_nonfinite: bool = True) -> Callable:
     """The unified train-step factory.
 
     * LM/audio (``cfg.family`` in {"lm", "audio", ...}): returns
@@ -50,9 +68,18 @@ def make_train_step(cfg: Any, opt_cfg: OptimizerConfig,
     model's ``shard`` constraints plus the shardings params were
     initialized into (see ``launch.train.build_state`` /
     ``build_spikingformer_state``).
+
+    ``guard_nonfinite`` (default on) adds in-jit non-finite detection: when
+    the loss or any gradient leaf is NaN/Inf, the parameter and optimizer
+    updates are suppressed via a tree-wide ``where`` (state bit-identical
+    to before the step) and ``metrics["nonfinite"]`` reports 1.0. The
+    driver (``launch.train._drive``) budgets *consecutive* skipped steps
+    and aborts past the budget — a single poisoned batch self-heals, a
+    diverged run still dies loudly.
     """
     if getattr(cfg, "family", None) == "vision":
-        return _make_vision_train_step(cfg, opt_cfg, microbatches, mesh)
+        return _make_vision_train_step(cfg, opt_cfg, microbatches, mesh,
+                                       guard_nonfinite)
     loss_fn = _loss_fn_for(cfg)
 
     def train_step(params, opt_state, batch):
@@ -79,13 +106,19 @@ def make_train_step(cfg: Any, opt_cfg: OptimizerConfig,
         new_params, new_opt, opt_metrics = adamw_update(
             params, grads, opt_state, opt_cfg)
         metrics = {**metrics, **opt_metrics}
+        if guard_nonfinite:
+            finite = _all_finite(loss, grads)
+            new_params = _select_tree(finite, new_params, params)
+            new_opt = _select_tree(finite, new_opt, opt_state)
+            metrics["nonfinite"] = 1.0 - finite.astype(jnp.float32)
         return new_params, new_opt, metrics
 
     return train_step
 
 
 def _make_vision_train_step(cfg, opt_cfg: OptimizerConfig,
-                            microbatches: int, mesh) -> Callable:
+                            microbatches: int, mesh,
+                            guard_nonfinite: bool = True) -> Callable:
     """Fused BPTT + AdamW step for the Spikingformer vision path.
 
     ``cfg`` is a :class:`repro.core.spikingformer.SpikingFormerConfig`; its
@@ -126,7 +159,16 @@ def _make_vision_train_step(cfg, opt_cfg: OptimizerConfig,
             params, state, images, labels, cfg)
         new_params, new_opt, opt_metrics = adamw_update(
             params, grads, opt_state, opt_cfg)
-        return new_params, new_state, new_opt, {**metrics, **opt_metrics}
+        metrics = {**metrics, **opt_metrics}
+        if guard_nonfinite:
+            finite = _all_finite(metrics["loss"], grads)
+            new_params = _select_tree(finite, new_params, params)
+            # BN running statistics ride the forward pass, so a poisoned
+            # batch contaminates them too — roll them back with the rest.
+            new_state = _select_tree(finite, new_state, state)
+            new_opt = _select_tree(finite, new_opt, opt_state)
+            metrics["nonfinite"] = 1.0 - finite.astype(jnp.float32)
+        return new_params, new_state, new_opt, metrics
 
     return train_step
 

@@ -8,6 +8,11 @@
 * ElasticPlan — given a failed/resized device set, computes the new mesh
   shape (dropping whole pods first, then data rows) and drives
   checkpoint-based resharding via ``restore_checkpoint`` on the new mesh.
+* NonFiniteGuard — host-side budget for the in-jit non-finite step skip
+  (``make_train_step(guard_nonfinite=True)``): one poisoned batch is
+  absorbed silently-but-loggedly, a run whose every step is NaN aborts
+  with :class:`NonFiniteBudgetExceeded` instead of spinning to the step
+  limit with frozen parameters.
 """
 from __future__ import annotations
 
@@ -52,6 +57,42 @@ class StragglerMonitor:
     @property
     def median(self) -> float:
         return statistics.median(self.durations) if self.durations else 0.0
+
+
+class NonFiniteBudgetExceeded(RuntimeError):
+    """Too many *consecutive* steps skipped for non-finite loss/grads."""
+
+
+class NonFiniteGuard:
+    """Tracks the in-jit skip flag (``metrics["nonfinite"]``) on the host.
+
+    ``observe(nonfinite, step)`` returns True when the step was skipped;
+    after more than ``budget`` consecutive skips it raises
+    :class:`NonFiniteBudgetExceeded` — consecutive, not total, because a
+    transient poisoned batch must not count against a long run while a
+    diverged model (every step NaN) must die fast.
+    """
+
+    def __init__(self, budget: int = 3):
+        self.budget = budget
+        self.consecutive = 0
+        self.total = 0
+        self.skipped_steps: list[int] = []
+
+    def observe(self, nonfinite: bool, step: int) -> bool:
+        if not nonfinite:
+            self.consecutive = 0
+            return False
+        self.consecutive += 1
+        self.total += 1
+        self.skipped_steps.append(step)
+        if self.consecutive > self.budget:
+            raise NonFiniteBudgetExceeded(
+                f"{self.consecutive} consecutive non-finite steps "
+                f"(budget {self.budget}); last skipped step {step}. The "
+                f"model has likely diverged — refusing to spin with frozen "
+                f"parameters.")
+        return True
 
 
 class PreemptionGuard:

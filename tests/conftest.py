@@ -38,7 +38,7 @@ try:
                                 str(Path(__file__).parent / ".jax_cache"))
         jax.config.update("jax_compilation_cache_dir", _cache)
         jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
-except Exception:  # older jax without the persistent cache: run cold
+except Exception:  # e2a: ignore[E2A006] - older jax w/o the cache: run cold
     pass
 
 @pytest.fixture

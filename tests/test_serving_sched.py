@@ -6,10 +6,13 @@ model) and through the real :class:`ServingEngine` (tiny model) must:
 
 * never deadlock — the system drains in a bounded number of steps;
 * never drop a request silently — every submit ends in exactly one terminal
-  status (done/expired/evicted) or an explicit rejection with a reason;
+  status (done/expired/evicted/faulted) or an explicit rejection with a
+  reason;
 * never double-book a slot — slot occupants are unique, and misuse raises
   :class:`SlotError` rather than corrupting a neighbour;
-* admit in FIFO order.
+* admit in FIFO order;
+* keep all of the above when the fused launch itself raises mid-drain
+  (failure-atomic steps) or a slot produces non-finite logits (quarantine).
 """
 import random
 
@@ -208,6 +211,80 @@ def test_engine_random_workload_full_accounting(seed):
         assert r.latency_steps is not None and r.latency_steps > 0
     for r in reqs:
         assert r.status in TERMINAL
+
+
+class _LaunchFault(RuntimeError):
+    """Stands in for anything the fused launch can throw (OOM, a kernel
+    assert, an interconnect hiccup)."""
+
+
+@given(seed=st.integers(0, 1_000))
+@settings(max_examples=5, deadline=None)
+def test_engine_step_failures_keep_full_accounting(seed):
+    """Full accounting and slot exclusivity survive injected failures:
+    the fused launch raises on randomly chosen invocations (the engine's
+    step is failure-atomic, so the caller retries the identical step) and
+    chaos ``serving.slot`` faults NaN random slots (quarantine). Still:
+    ``done + rejected + expired + evicted + faulted == submitted``, no
+    slot is leaked or double-booked, and the system drains."""
+    from repro.chaos.inject import chaos
+    from repro.chaos.schedule import FaultSchedule, FaultSpec
+
+    rng = random.Random(seed)
+    engine = _tiny_engine(slots=2, max_queue=3)
+    crash_calls = {rng.randint(2, 15) for _ in range(rng.randint(1, 3))}
+    real_step, calls = engine._step, {"n": 0}
+
+    def flaky(*args):
+        calls["n"] += 1
+        if calls["n"] in crash_calls:
+            raise _LaunchFault(f"injected launch failure #{calls['n']}")
+        return real_step(*args)
+
+    engine._step = flaky
+    schedule = FaultSchedule(seed=seed, faults=tuple(
+        FaultSpec("chaos.serving.slot", rng.randint(2, 12), "nan",
+                  value=float(rng.randrange(2)))
+        for _ in range(rng.randint(1, 2))))
+    reqs = [Request(uid=i,
+                    prompt=[rng.randint(1, 90) for _ in
+                            range(rng.randint(1, 5))],
+                    max_new_tokens=rng.randint(1, 6),
+                    deadline=rng.choice([None, None, rng.randint(2, 25)]))
+            for i in range(8)]
+    with chaos(schedule):
+        for r in reqs[:5]:
+            engine.submit(r)
+        evict_uid = rng.choice([None, reqs[0].uid])
+        ok_steps = failures = 0
+        while engine.sched.has_work() and ok_steps < 300:
+            try:
+                engine.step()
+            except _LaunchFault:
+                failures += 1
+                continue          # failure-atomic: retry the identical step
+            ok_steps += 1
+            if ok_steps == 2:     # mid-flight arrivals + an eviction
+                for r in reqs[5:]:
+                    engine.submit(r)
+                if evict_uid is not None:
+                    engine.evict(evict_uid)
+            live = [r.uid for r in engine.sched.slot_map if r is not None]
+            assert len(live) == len(set(live)), "slot double-booked"
+
+    assert ok_steps < 300, "engine failed to drain under injected failures"
+    assert failures == len([c for c in crash_calls if c <= calls["n"]])
+    terminal = (engine.finished + engine.rejected + engine.expired +
+                engine.evicted + engine.faulted)
+    assert len(terminal) == len(reqs), "a request was dropped or counted " \
+        "twice under injected failures"
+    assert {r.uid for r in terminal} == {r.uid for r in reqs}
+    for r in engine.faulted:
+        assert r.status == "faulted" and r.reason == "numeric_fault"
+        assert r.finish_step >= 0
+    # only successful launches advance the engine clock
+    assert engine.step_count == ok_steps
+    assert engine.sched.free_slots() == list(range(engine.slots))
 
 
 def test_engine_evict_queued_request():
