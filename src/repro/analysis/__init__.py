@@ -11,7 +11,7 @@ from __future__ import annotations
 from typing import Any
 
 __all__ = ["Finding", "assert_trace_count", "bench_drift", "lint_paths",
-           "lint_source", "run_audit", "trace_count"]
+           "lint_source", "run_audit", "run_contracts", "trace_count"]
 
 _LAZY = {
     "Finding": ("repro.analysis.report", "Finding"),
@@ -20,6 +20,7 @@ _LAZY = {
     "lint_paths": ("repro.analysis.lint", "lint_paths"),
     "lint_source": ("repro.analysis.lint", "lint_source"),
     "run_audit": ("repro.analysis.audit", "run_audit"),
+    "run_contracts": ("repro.analysis.contracts", "run_contracts"),
     "trace_count": ("repro.analysis.tracing", "trace_count"),
 }
 

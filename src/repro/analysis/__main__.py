@@ -1,7 +1,8 @@
 """CLI for the analysis subsystem: ``python -m repro.analysis`` (also the
 ``repro-analyze`` console script).
 
-    python -m repro.analysis --lint --audit          # the CI analysis leg
+    python -m repro.analysis --lint --audit --contracts   # the CI leg
+    python -m repro.analysis --contracts             # kernel contracts only
     python -m repro.analysis --lint --paths src
     python -m repro.analysis --audit --batch 16
     python -m repro.analysis --bench-drift BENCH.json
@@ -31,6 +32,11 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--audit", action="store_true",
                     help="audit execution plans, serving caches and mesh "
                          "renders for every registered config x policy")
+    ap.add_argument("--contracts", action="store_true",
+                    help="verify kernel contracts abstractly (block/grid "
+                         "legality, custom-VJP cotangent shapes, reference "
+                         "parity, VMEM budgets) across the preset x site "
+                         "matrix -- executes zero Pallas kernels")
     ap.add_argument("--bench-drift", metavar="BENCH_JSON", default=None,
                     help="diff a BENCH.json artifact against --baseline")
     ap.add_argument("--baseline", default="benchmarks/BENCH_seed.json",
@@ -41,6 +47,9 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--batch", type=int, default=1,
                     help="global batch for the audit's VMEM estimates "
                          "(default: %(default)s)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write the findings (post --strict promotion) "
+                         "as machine-readable JSON to PATH")
     ap.add_argument("--strict", action="store_true",
                     help="promote warnings to errors")
     ap.add_argument("-v", "--verbose", action="store_true",
@@ -55,8 +64,9 @@ def main(argv: list[str] | None = None) -> int:
             print(f"{rule}  {desc}")
         return 0
 
-    if not (args.lint or args.audit or args.bench_drift):
-        ap.error("nothing to do: pass --lint, --audit and/or --bench-drift")
+    if not (args.lint or args.audit or args.contracts or args.bench_drift):
+        ap.error("nothing to do: pass --lint, --audit, --contracts and/or "
+                 "--bench-drift")
 
     findings = []
     if args.lint:
@@ -67,13 +77,19 @@ def main(argv: list[str] | None = None) -> int:
     if args.audit:
         from repro.analysis.audit import run_audit
         findings += run_audit(batch=args.batch)
+    if args.contracts:
+        from repro.analysis.contracts import run_contracts
+        findings += run_contracts(batch=args.batch)
     if args.bench_drift:
         from repro.analysis.drift import bench_drift
         findings += bench_drift(args.bench_drift, args.baseline)
 
-    from repro.analysis.report import (exit_code, promote_warnings, render)
+    from repro.analysis.report import (exit_code, promote_warnings, render,
+                                       write_json)
     if args.strict:
         findings = promote_warnings(findings)
+    if args.json:
+        write_json(findings, args.json)
     print(render(findings, verbose=args.verbose))
     return exit_code(findings)
 

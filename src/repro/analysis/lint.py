@@ -30,20 +30,31 @@ Every rule encodes a hazard this repo has actually shipped (and fixed):
   failures — and real ones — into silent corruption; handle, narrow,
   or re-raise. A deliberate swallow takes the allowlist comment and
   thereby documents itself.
+* **E2A007** — a ``pallas_call`` site where a ``BlockSpec`` ``index_map``
+  lambda's arity disagrees with the literal ``grid=`` rank. Pallas passes
+  one program index per grid axis; an arity mismatch raises only at trace
+  time on the arm that actually launches — which autotuned dispatch may
+  not exercise until production. Resolved through local literal
+  ``grid = (...)`` / ``spec = pl.BlockSpec(...)`` assignments; dynamic
+  grids are skipped.
 
 Findings are suppressed per line with ``# e2a: ignore[E2A001]`` (comma
 lists allowed; bare ``# e2a: ignore`` silences every rule) on the flagged
-line or the line above. See ``docs/ANALYSIS.md`` for the full catalog and
-how to add a rule.
+line or the line above. A suppression comment that silences nothing is
+itself reported (``lint.ignore``, warning) so stale allowlists can't
+accumulate. See ``docs/ANALYSIS.md`` for the full catalog and how to add
+a rule.
 """
 from __future__ import annotations
 
 import ast
+import io
 import re
+import tokenize
 from pathlib import Path
-from typing import Iterable, Iterator, Sequence
+from typing import Iterable, Iterator
 
-from repro.analysis.report import Finding, error
+from repro.analysis.report import Finding, error, warning
 
 __all__ = ["RULES", "lint_paths", "lint_source"]
 
@@ -60,6 +71,8 @@ RULES: dict[str, str] = {
     "E2A005": "DeprecationWarning without an explicit stacklevel",
     "E2A006": "fault-swallowing handler: bare except, or broad "
               "except Exception/BaseException with a no-op body",
+    "E2A007": "pallas_call site where a BlockSpec index_map lambda's "
+              "arity disagrees with the literal grid= rank",
 }
 
 _IGNORE_RE = re.compile(r"#\s*e2a:\s*ignore(?:\[([A-Z0-9,\s]+)\])?")
@@ -81,14 +94,34 @@ def _unparse(node: ast.AST) -> str:
         return ""
 
 
-def _suppressed(lines: Sequence[str], lineno: int, rule: str) -> bool:
+def _ignore_comments(source: str) -> dict[int, set[str] | None]:
+    """Line -> rule set of every real ``# e2a: ignore`` *comment token*
+    (``None`` = bare ignore, silences every rule). Tokenizing instead of
+    regexing raw lines keeps the pattern inside docstrings/strings — like
+    this module's own docstring — from counting as a suppression."""
+    out: dict[int, set[str] | None] = {}
+    try:
+        for tok in tokenize.generate_tokens(io.StringIO(source).readline):
+            if tok.type != tokenize.COMMENT:
+                continue
+            m = _IGNORE_RE.search(tok.string)
+            if m:
+                out[tok.start[0]] = None if m.group(1) is None else \
+                    {r.strip() for r in m.group(1).split(",")}
+    except (tokenize.TokenError, IndentationError, SyntaxError):
+        pass   # unparsable source is reported as lint.parse upstream
+    return out
+
+
+def _suppression_line(ignores: dict[int, set[str] | None], lineno: int,
+                      rule: str) -> int | None:
+    """The ignore-comment line covering (lineno, rule), or None. A comment
+    covers its own line and the line below it."""
     for ln in (lineno, lineno - 1):
-        if 1 <= ln <= len(lines):
-            m = _IGNORE_RE.search(lines[ln - 1])
-            if m and (m.group(1) is None or
-                      rule in {r.strip() for r in m.group(1).split(",")}):
-                return True
-    return False
+        rules = ignores.get(ln, ())
+        if rules is None or rule in rules:
+            return ln
+    return None
 
 
 def _func_scopes(tree: ast.AST) -> Iterator[ast.AST]:
@@ -367,6 +400,84 @@ def _rule_e2a006(tree: ast.AST) -> Iterator[tuple[int, str]]:
                 f"is deliberate, say so with # e2a: ignore[E2A006]")
 
 
+# -- E2A007 ------------------------------------------------------------------
+
+def _lambda_arity(node: ast.AST) -> int | None:
+    """Positional arity of a plain lambda, else None (varargs and default
+    carriers are out of static reach)."""
+    if not isinstance(node, ast.Lambda):
+        return None
+    a = node.args
+    if a.vararg or a.kwarg or a.kwonlyargs or a.defaults:
+        return None
+    return len(a.posonlyargs) + len(a.args)
+
+
+def _blockspec_index_map(node: ast.AST) -> ast.AST | None:
+    """The index_map expression of a ``pl.BlockSpec(...)`` call, or None."""
+    if not (isinstance(node, ast.Call) and
+            _unparse(node.func).endswith("BlockSpec")):
+        return None
+    for kw in node.keywords:
+        if kw.arg == "index_map":
+            return kw.value
+    return node.args[1] if len(node.args) >= 2 else None
+
+
+def _grid_rank(node: ast.AST, grids: dict[str, int]) -> int | None:
+    """Rank of a literal ``grid=`` expression (tuple literal, int literal,
+    or a name bound to a tuple literal in this scope)."""
+    if isinstance(node, ast.Tuple):
+        return len(node.elts)
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return 1
+    if isinstance(node, ast.Name):
+        return grids.get(node.id)
+    return None
+
+
+def _rule_e2a007(tree: ast.AST) -> Iterator[tuple[int, str]]:
+    for scope in _func_scopes(tree):
+        grids: dict[str, int] = {}   # name -> literal grid tuple rank
+        specs: dict[str, int] = {}   # name -> BlockSpec index_map arity
+        for node in _ordered_nodes(scope):
+            if isinstance(node, ast.Assign):
+                arity = _lambda_arity(_blockspec_index_map(node.value))
+                for tgt in node.targets:
+                    if not isinstance(tgt, ast.Name):
+                        continue
+                    grids.pop(tgt.id, None)
+                    specs.pop(tgt.id, None)
+                    if isinstance(node.value, ast.Tuple):
+                        grids[tgt.id] = len(node.value.elts)
+                    elif arity is not None:
+                        specs[tgt.id] = arity
+            if not (isinstance(node, ast.Call) and
+                    _unparse(node.func).endswith("pallas_call")):
+                continue
+            grid_kw = next((kw.value for kw in node.keywords
+                            if kw.arg == "grid"), None)
+            rank = None if grid_kw is None else _grid_rank(grid_kw, grids)
+            if rank is None:
+                continue   # dynamic grid: out of static reach
+            for kw in node.keywords:
+                if kw.arg not in ("in_specs", "out_specs"):
+                    continue
+                items = kw.value.elts if isinstance(
+                    kw.value, (ast.List, ast.Tuple)) else [kw.value]
+                for item in items:
+                    arity = specs.get(item.id) \
+                        if isinstance(item, ast.Name) \
+                        else _lambda_arity(_blockspec_index_map(item))
+                    if arity is not None and arity != rank:
+                        yield item.lineno, (
+                            f"{kw.arg} BlockSpec index_map takes {arity} "
+                            f"program indices but grid= has rank {rank} — "
+                            f"pallas passes exactly one index per grid "
+                            f"axis, so this site raises at trace time on "
+                            f"the arm that launches it")
+
+
 _RULE_FNS = {
     "E2A001": _rule_e2a001,
     "E2A002": _rule_e2a002,
@@ -374,22 +485,37 @@ _RULE_FNS = {
     "E2A004": _rule_e2a004,
     "E2A005": _rule_e2a005,
     "E2A006": _rule_e2a006,
+    "E2A007": _rule_e2a007,
 }
 
 
 def lint_source(source: str, path: str = "<string>") -> list[Finding]:
-    """Run every rule over one source text; returns error findings."""
+    """Run every rule over one source text. Returns error findings, plus
+    a ``lint.ignore`` warning for each ``# e2a: ignore`` comment that
+    suppressed nothing."""
     try:
         tree = ast.parse(source)
     except SyntaxError as e:
         return [error("lint.parse", f"{path}:{e.lineno or 0}",
                       f"syntax error: {e.msg}")]
-    lines = source.splitlines()
+    ignores = _ignore_comments(source)
+    used: set[int] = set()
     findings = []
     for rule, fn in _RULE_FNS.items():
         for lineno, message in fn(tree):
-            if not _suppressed(lines, lineno, rule):
+            sup = _suppression_line(ignores, lineno, rule)
+            if sup is None:
                 findings.append(error(rule, f"{path}:{lineno}", message))
+            else:
+                used.add(sup)
+    for ln in sorted(set(ignores) - used):
+        named = ignores[ln]
+        tag = "" if named is None else f"[{','.join(sorted(named))}]"
+        findings.append(warning(
+            "lint.ignore", f"{path}:{ln}",
+            f"# e2a: ignore{tag} suppresses nothing — no finding on this "
+            f"line or the line below matches; drop the stale allowlist "
+            f"comment"))
     return findings
 
 

@@ -76,5 +76,23 @@ def exit_code(findings: Sequence[Finding]) -> int:
     return 1 if any(f.level == "error" for f in findings) else 0
 
 
-__all__ = ["Finding", "LEVELS", "error", "exit_code", "info",
-           "promote_warnings", "render", "warning"]
+def findings_json(findings: Sequence[Finding]) -> dict:
+    """Machine-readable report: the rows plus per-level counts (the shape
+    CI uploads as the ``findings.json`` artifact)."""
+    return {
+        "findings": [dataclasses.asdict(f) for f in findings],
+        "counts": {lvl: sum(1 for f in findings if f.level == lvl)
+                   for lvl in LEVELS},
+    }
+
+
+def write_json(findings: Sequence[Finding], path) -> None:
+    """Serialize :func:`findings_json` to ``path``."""
+    import json
+    from pathlib import Path
+    Path(path).write_text(
+        json.dumps(findings_json(findings), indent=2) + "\n")
+
+
+__all__ = ["Finding", "LEVELS", "error", "exit_code", "findings_json",
+           "info", "promote_warnings", "render", "warning", "write_json"]

@@ -523,6 +523,20 @@ def _ensure_builtins() -> None:
     import repro.core.spikingformer  # noqa: F401  (imports lif + layers too)
 
 
+#: Registered impls whose dispatch never launches a Pallas kernel (pure
+#: jnp/XLA paths) — the kernel-contract verifier
+#: (``repro.analysis.contracts``) requires a ``KernelContract`` declaration
+#: for every registered (op, impl) pair NOT named here.
+CONTRACT_EXEMPT_IMPLS: frozenset[str] = frozenset({"jnp"})
+
+
+def registered_kernels() -> tuple[tuple[str, str], ...]:
+    """Every registered ``(op, impl)`` pair, builtins imported — the
+    contract verifier's coverage universe."""
+    _ensure_builtins()
+    return tuple(sorted(_REGISTRY))
+
+
 # ---------------------------------------------------------------------------
 # Site-table registry (construction-time override validation)
 # ---------------------------------------------------------------------------
@@ -709,13 +723,15 @@ def apply_legacy_exec_flags(cfg: Any, backend: str | None,
 
 
 __all__ = [
-    "BACKENDS", "BreakerTrip", "ExecutionPolicy", "FUSED_EPILOGUE_IMPLS",
+    "BACKENDS", "BreakerTrip", "CONTRACT_EXEMPT_IMPLS", "ExecutionPolicy",
+    "FUSED_EPILOGUE_IMPLS",
     "NAMED_POLICIES", "OPS", "SiteDecision", "apply_legacy_exec_flags",
     "available_impls", "breaker_trips", "default_impl", "default_policy",
     "describe_breaker", "dispatch_kernel", "dispatch_site",
     "fused_epilogue_fallback", "get_kernel", "known_site_keys",
     "list_named_policies", "log_fallbacks", "named_policy",
     "packed_fallback", "plan_sites", "policy_from_flags", "register_kernel",
-    "register_site_table", "reset_breaker", "runtime_fallback",
+    "register_site_table", "registered_kernels", "reset_breaker",
+    "runtime_fallback",
     "site_tables", "unregister_kernel", "warn_deprecated_flags",
 ]

@@ -1,0 +1,98 @@
+"""Kernel-contract declarations consumed by ``repro.analysis.contracts``.
+
+Every Pallas kernel module declares its public entry points here as
+:class:`KernelContract` rows: the entry point itself, a builder that
+produces *abstract* arguments (``jax.ShapeDtypeStruct``) for a normalized
+:class:`KernelCase` geometry, the pure-jnp oracle from
+:mod:`repro.kernels.ref`, and the ``(op, impl)`` registry pairs whose
+dispatch launches the kernel. The verifier walks the declarations with
+``jax.eval_shape`` + a ``pallas_call`` interceptor — no kernel ever
+executes — so a declaration is a *contract*, not a benchmark: it states
+which geometries the kernel must tile, index and type correctly.
+
+Declaring a new kernel:
+
+1. Write a builder ``(case: KernelCase) -> (args, fn_kwargs, ref_kwargs)``
+   at the bottom of the kernel's own module (the module knows its calling
+   convention; this module stays import-light and import-cycle-free).
+2. ``declare_contract(KernelContract(name=..., fn=..., build=..., ref=...,
+   serves=((op, impl), ...)))`` next to it.
+3. Add the jnp oracle to ``ref.py`` if one does not exist yet.
+
+``serves`` must name registered ``(op, impl)`` pairs
+(:func:`repro.core.policy.registered_kernels`); the verifier errors on a
+non-exempt registered impl no declaration covers, so forgetting step 2
+fails CI instead of silently skipping the new kernel.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+#: Geometry axes follow the repo's canonical dispatch shapes
+#: (``repro.tune.workloads``): ``t`` is the leading time/batch grid axis
+#: (1 when the kernel has none), ``m`` the row axis, ``c`` the contraction
+#: axis (0 for elementwise/BN kernels with no matmul), ``k`` the output
+#: feature axis.
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelCase:
+    """One abstract geometry a kernel contract is checked at."""
+
+    t: int
+    m: int
+    c: int
+    k: int
+    packed: bool = False
+    dtype: str = "float32"
+
+    @property
+    def shape4(self) -> tuple[int, int, int, int]:
+        return (self.t, self.m, self.c, self.k)
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelContract:
+    """Declaration of one kernel entry point's static contract.
+
+    ``build(case)`` returns ``(args, fn_kwargs, ref_kwargs)`` where
+    ``args`` are ``jax.ShapeDtypeStruct`` leaves (plus static scalars),
+    ``fn_kwargs`` go to ``fn`` and ``ref_kwargs`` to ``ref`` — the two
+    are called on the *same* positional args so output avals can be
+    compared leaf by leaf. ``build`` may raise :class:`SkipCase` for
+    geometries the kernel legitimately never sees.
+    """
+
+    name: str
+    fn: Callable[..., Any]
+    build: Callable[[KernelCase], tuple[tuple, dict, dict]]
+    ref: Callable[..., Any] | None
+    serves: tuple[tuple[str, str], ...]
+
+
+class SkipCase(Exception):
+    """Raised by a builder for a geometry the kernel never dispatches at
+    (e.g. a packed arm with a ragged contraction — the planner demotes
+    those before the kernel is reached)."""
+
+
+_CONTRACTS: dict[str, KernelContract] = {}
+
+
+def declare_contract(contract: KernelContract) -> KernelContract:
+    if contract.name in _CONTRACTS:
+        raise ValueError(f"duplicate kernel contract {contract.name!r}")
+    _CONTRACTS[contract.name] = contract
+    return contract
+
+
+def kernel_contracts() -> dict[str, KernelContract]:
+    """All declared contracts, importing the kernel modules on demand."""
+    import repro.kernels.conv_spike  # noqa: F401
+    import repro.kernels.fused_bn  # noqa: F401
+    import repro.kernels.lif_soma  # noqa: F401
+    import repro.kernels.neuron_layer  # noqa: F401
+    import repro.kernels.spike_matmul  # noqa: F401
+
+    return dict(_CONTRACTS)

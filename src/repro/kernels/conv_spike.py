@@ -109,3 +109,27 @@ def spike_patch_matmul(patches: jax.Array, w: jax.Array, *,
                                 ("block_c", block_c)) if v is not None}
     return spike_matmul_packed_batched(spike_pack(patches), wb,
                                        interpret=interpret, **blocks)
+
+
+# ---------------------------------------------------------------------------
+# Kernel-contract declarations (repro.analysis.contracts).
+# ---------------------------------------------------------------------------
+
+from repro.kernels import ref as _ref  # noqa: E402
+from repro.kernels.contract import (KernelContract, SkipCase,  # noqa: E402
+                                    declare_contract)
+
+
+def _build_spike_patch_matmul(case):
+    if case.c % 8 != 0:
+        raise SkipCase(f"im2col dim {case.c} % 8 != 0 -> dense arm")
+    f = jax.ShapeDtypeStruct
+    args = (f((case.t, case.m, case.c), case.dtype),
+            f((case.c, case.k), case.dtype))
+    return args, {}, {}
+
+
+declare_contract(KernelContract(
+    name="spike_patch_matmul", fn=spike_patch_matmul,
+    build=_build_spike_patch_matmul, ref=_ref.spike_patch_matmul_ref,
+    serves=(("conv", "pallas_packed"),)))

@@ -96,3 +96,44 @@ def bn_bwd(g: jax.Array, x: jax.Array, gamma: jax.Array, mu: jax.Array,
                    jax.ShapeDtypeStruct((1, d), jnp.float32),
                    jax.ShapeDtypeStruct((1, d), jnp.float32)],
         interpret=interpret)(g, x, gamma.reshape(1, d), mu, sqrt_d)
+
+
+# ---------------------------------------------------------------------------
+# Kernel-contract declarations (repro.analysis.contracts). BN launches both
+# at its own sites (tokenizer.bn under the dense conv stage) and inside the
+# pipeline arms of linear_bn / the fused conv, always on fold_rows output —
+# the builders therefore collapse the case's (t, m) into the row axis.
+# ---------------------------------------------------------------------------
+
+from repro.kernels import ref as _ref  # noqa: E402
+from repro.kernels.contract import KernelContract, declare_contract  # noqa: E402
+
+_BN_SERVES = (("bn", "pallas"), ("linear_bn", "pallas"),
+              ("linear_bn", "pallas+spike_mm"), ("conv", "pallas"),
+              ("conv", "pallas_packed"))
+
+
+def _build_bn_fwd(case):
+    f = jax.ShapeDtypeStruct
+    rows = case.t * case.m
+    args = (f((rows, case.k), case.dtype), f((case.k,), case.dtype),
+            f((case.k,), case.dtype))
+    return args, {}, {}
+
+
+def _build_bn_bwd(case):
+    f = jax.ShapeDtypeStruct
+    rows = case.t * case.m
+    args = (f((rows, case.k), case.dtype), f((rows, case.k), case.dtype),
+            f((case.k,), case.dtype), f((1, case.k), jnp.float32),
+            f((1, case.k), jnp.float32))
+    return args, {}, {}
+
+
+declare_contract(KernelContract(
+    name="bn_fwd", fn=bn_fwd, build=_build_bn_fwd, ref=_ref.bn_fwd_ref,
+    serves=_BN_SERVES))
+
+declare_contract(KernelContract(
+    name="bn_bwd", fn=bn_bwd, build=_build_bn_bwd, ref=_ref.bn_bwd_ref,
+    serves=_BN_SERVES))

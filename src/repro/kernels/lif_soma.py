@@ -125,3 +125,45 @@ def lif_soma_bwd(g: jax.Array, u_seq: jax.Array, spikes: jax.Array,
         kernel, grid=grid, in_specs=[spec] * 4 + [carry_spec],
         out_specs=spec, out_shape=jax.ShapeDtypeStruct(g.shape, g.dtype),
         interpret=interpret)(g, u_seq, spikes, mask, gu_last)
+
+
+# ---------------------------------------------------------------------------
+# Kernel-contract declarations (repro.analysis.contracts).
+# ---------------------------------------------------------------------------
+
+from repro.kernels import ref as _ref  # noqa: E402
+from repro.kernels.contract import KernelContract, declare_contract  # noqa: E402
+
+
+def _build_lif_fwd(case):
+    x = jax.ShapeDtypeStruct((case.t, case.m, case.k), case.dtype)
+    return (x,), {}, {}
+
+
+def _build_lif_bwd(case):
+    f = jax.ShapeDtypeStruct
+    args = tuple(f((case.t, case.m, case.k), case.dtype) for _ in range(4))
+    kw = {"alpha": 0.5, "grad_scale": 1.0}
+    return args, kw, kw
+
+
+def _build_lif_bwd_carry(case):
+    f = jax.ShapeDtypeStruct
+    args = (tuple(f((case.t, case.m, case.k), case.dtype) for _ in range(4))
+            + (f((case.m, case.k), case.dtype),))
+    kw = {"alpha": 0.5, "grad_scale": 1.0}
+    return args, kw, kw
+
+
+declare_contract(KernelContract(
+    name="lif_soma_fwd", fn=lif_soma_fwd, build=_build_lif_fwd,
+    ref=_ref.lif_soma_fwd_ref,
+    serves=(("lif", "pallas"), ("lif_state", "pallas"))))
+
+declare_contract(KernelContract(
+    name="lif_soma_bwd", fn=lif_soma_bwd, build=_build_lif_bwd,
+    ref=_ref.lif_soma_bwd_ref, serves=(("lif", "pallas"),)))
+
+declare_contract(KernelContract(
+    name="lif_soma_bwd_carry", fn=lif_soma_bwd, build=_build_lif_bwd_carry,
+    ref=_ref.lif_soma_bwd_carry_ref, serves=(("lif_state", "pallas"),)))

@@ -235,3 +235,49 @@ def neuron_layer_eval(x: jax.Array, w: jax.Array, bias: jax.Array, *,
         scratch_shapes=[pltpu.VMEM((t, bm, bk), jnp.float32)],
         interpret=resolve_interpret(interpret))(
             xin, w, bias.reshape(1, k).astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Kernel-contract declarations (repro.analysis.contracts). The megakernel
+# runs dense or bit-packed; the packed arm requires C % 8 == 0 (the callers
+# demote to the dense arm otherwise, logged), so both arms are declared via
+# the case's ``packed`` flag rather than a skip.
+# ---------------------------------------------------------------------------
+
+from repro.kernels import ref as _ref  # noqa: E402
+from repro.kernels.contract import (KernelContract, SkipCase,  # noqa: E402
+                                    declare_contract)
+
+_NL_SERVES = (("linear_bn", "fused_epilogue"), ("conv", "fused_epilogue"))
+
+
+def _nl_packed(case) -> bool:
+    if case.packed and case.c % 8 != 0:
+        raise SkipCase(f"packed arm with C {case.c} % 8 != 0 never launches")
+    return case.packed
+
+
+def _build_nl_train(case):
+    f = jax.ShapeDtypeStruct
+    packed = _nl_packed(case)
+    args = (f((case.t, case.m, case.c), case.dtype),
+            f((case.c, case.k), case.dtype), f((case.k,), case.dtype),
+            f((case.k,), case.dtype))
+    return args, {"packed": packed}, {}
+
+
+def _build_nl_eval(case):
+    f = jax.ShapeDtypeStruct
+    packed = _nl_packed(case)
+    args = (f((case.t, case.m, case.c), case.dtype),
+            f((case.c, case.k), case.dtype), f((case.k,), jnp.float32))
+    return args, {"packed": packed}, {}
+
+
+declare_contract(KernelContract(
+    name="neuron_layer_train", fn=neuron_layer_train, build=_build_nl_train,
+    ref=_ref.neuron_layer_train_ref, serves=_NL_SERVES))
+
+declare_contract(KernelContract(
+    name="neuron_layer_eval", fn=neuron_layer_eval, build=_build_nl_eval,
+    ref=_ref.neuron_layer_eval_ref, serves=_NL_SERVES))

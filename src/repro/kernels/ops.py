@@ -155,7 +155,10 @@ def _bn_bwd(eps, interpret, res, g):
     gy = g[0]  # mu/var cotangents: running stats sit outside the loss graph
     dx, dgamma, dbeta = fused_bn.bn_bwd(gy, x, gamma, mu, sqrt_d,
                                         interpret=interpret)
-    return dx, dgamma.reshape(gamma.shape), dbeta.reshape(gamma.shape)
+    # The kernel's param cotangents are fp32 stat rows; cast back to the
+    # param dtype so non-fp32 gamma/beta never silently upcast the update.
+    return (dx, dgamma.reshape(gamma.shape).astype(gamma.dtype),
+            dbeta.reshape(gamma.shape).astype(gamma.dtype))
 
 
 bn_train_op.defvjp(_bn_fwd, _bn_bwd)

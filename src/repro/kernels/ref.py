@@ -36,9 +36,68 @@ def lif_soma_bwd_ref(g: jax.Array, u_seq: jax.Array, spikes: jax.Array,
     return dx
 
 
+def lif_soma_bwd_carry_ref(g: jax.Array, u_seq: jax.Array,
+                           spikes: jax.Array, mask: jax.Array,
+                           gu_last: jax.Array, *, alpha: float = 0.5,
+                           grad_scale: float = 1.0):
+    """Temporally-tiled GRAD: the next tile's carry cotangent ``gu_last``
+    (M, D) seeds the reverse recursion additively at t = T-1 (it lands on
+    ``grad_u`` *after* the step's own surrogate term, exactly like the
+    kernel), then eq. 12 runs as usual."""
+    def step(grad_u_next, inp):
+        gt, ut, st, mt, seed = inp
+        grad_s = gt - alpha * ut * grad_u_next
+        grad_u = (grad_u_next * alpha * (1.0 - st)
+                  + grad_s * mt * grad_scale + seed)
+        return grad_u, grad_u
+
+    seeds = jnp.zeros_like(g).at[-1].set(gu_last.astype(g.dtype))
+    init = jnp.zeros_like(g[0])
+    _, dx = jax.lax.scan(step, init, (g, u_seq, spikes, mask, seeds),
+                         reverse=True)
+    return dx
+
+
 def spike_matmul_ref(spikes: jax.Array, w: jax.Array) -> jax.Array:
     """(M, C) {0,1} x (C, K)."""
     return spikes.astype(w.dtype) @ w
+
+
+def spike_matmul_batched_ref(spikes: jax.Array, w: jax.Array) -> jax.Array:
+    """(G, M, C) {0,1} x (G, C, K) per-group matmul."""
+    return jnp.einsum("gmc,gck->gmk", spikes.astype(w.dtype), w)
+
+
+def spike_patch_matmul_ref(patches: jax.Array, w: jax.Array) -> jax.Array:
+    """(T, M, C) {0,1} im2col patches x shared (C, K) weight."""
+    return jnp.einsum("tmc,ck->tmk", patches.astype(w.dtype), w)
+
+
+def neuron_layer_train_ref(x: jax.Array, w: jax.Array, gamma: jax.Array,
+                           beta: jax.Array, *, alpha: float = 0.5,
+                           th_fire: float = 1.0, eps: float = 1e-5):
+    """Train-mode neuron layer pipeline: x (T, M, C) @ w (C, K) -> BN over
+    all T*M rows (batch statistics) -> SOMA. Returns ``(spikes (T, M, K),
+    mu (1, K), var (1, K))`` like the megakernel."""
+    t, m, _ = x.shape
+    k = w.shape[-1]
+    acc = jnp.einsum("tmc,ck->tmk", x.astype(w.dtype), w)
+    y, mu, sqrt_d = bn_fwd_ref(acc.reshape(t * m, k), gamma, beta, eps)
+    var = sqrt_d * sqrt_d - eps
+    s, _, _ = lif_soma_fwd_ref(y.reshape(t, m, k), alpha=alpha,
+                               th_fire=th_fire)
+    return s, mu, var
+
+
+def neuron_layer_eval_ref(x: jax.Array, w: jax.Array, bias: jax.Array, *,
+                          alpha: float = 0.5, th_fire: float = 1.0):
+    """Eval-mode neuron layer: BN already folded into (w, bias); returns
+    spikes (T, M, K)."""
+    acc = jnp.einsum("tmc,ck->tmk", x.astype(w.dtype), w)
+    acc = acc + bias.reshape(1, 1, -1).astype(acc.dtype)
+    s, _, _ = lif_soma_fwd_ref(acc.astype(x.dtype), alpha=alpha,
+                               th_fire=th_fire)
+    return s
 
 
 def bn_fwd_ref(x: jax.Array, gamma: jax.Array, beta: jax.Array,

@@ -152,3 +152,42 @@ def spike_matmul_packed_batched(packed: jax.Array, w: jax.Array, *,
 def spike_matmul_batched(spikes: jax.Array, w: jax.Array, **kw) -> jax.Array:
     """Convenience: unpacked {0,1} spikes (G, M, C) x (G, C, K)."""
     return spike_matmul_packed_batched(spike_pack(spikes), w, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Kernel-contract declarations (repro.analysis.contracts): abstract-geometry
+# builders + the (op, impl) dispatch pairs whose sites launch these kernels.
+# ---------------------------------------------------------------------------
+
+from repro.kernels import ref as _ref  # noqa: E402
+from repro.kernels.contract import (KernelContract, SkipCase,  # noqa: E402
+                                    declare_contract)
+
+
+def _build_spike_matmul(case):
+    if case.c % 8 != 0:
+        raise SkipCase(f"contraction {case.c} % 8 != 0 -> dense fallback")
+    f = jax.ShapeDtypeStruct
+    args = (f((case.t * case.m, case.c), case.dtype),
+            f((case.c, case.k), case.dtype))
+    return args, {}, {}
+
+
+def _build_spike_matmul_batched(case):
+    if case.c % 8 != 0:
+        raise SkipCase(f"contraction {case.c} % 8 != 0 -> jnp einsum")
+    f = jax.ShapeDtypeStruct
+    args = (f((case.t, case.m, case.c), case.dtype),
+            f((case.t, case.c, case.k), case.dtype))
+    return args, {}, {}
+
+
+declare_contract(KernelContract(
+    name="spike_matmul", fn=spike_matmul, build=_build_spike_matmul,
+    ref=_ref.spike_matmul_ref,
+    serves=(("linear_bn", "pallas+spike_mm"),)))
+
+declare_contract(KernelContract(
+    name="spike_matmul_batched", fn=spike_matmul_batched,
+    build=_build_spike_matmul_batched, ref=_ref.spike_matmul_batched_ref,
+    serves=(("attn_qk", "pallas_packed"), ("attn_av", "pallas_packed"))))

@@ -203,6 +203,101 @@ def site_workloads(cfg, batch: int = 1,
     return out
 
 
+@dataclasses.dataclass(frozen=True)
+class KernelShapeCase:
+    """One site's abstract geometry at the *kernel* boundary.
+
+    Unlike :class:`SiteWorkload` (the energy model's per-site op counts),
+    these rows carry the normalized ``(t, m, c, k)`` launch geometry the
+    kernel-contract verifier (``repro.analysis.contracts``) feeds the
+    declared builders: ``t`` the leading time/batch grid axis (1 when the
+    launch folds it away), ``m`` rows, ``c`` contraction (0 for
+    elementwise/BN sites), ``k`` output features.
+    """
+
+    site: str
+    op: str
+    impl: str                       # effective impl from the plan
+    packed: bool
+    t: int
+    m: int
+    c: int
+    k: int
+
+
+def kernel_shape_cases(cfg, batch: int = 1) -> list[KernelShapeCase]:
+    """Kernel-boundary geometries for every planned site of ``cfg``.
+
+    Derived from the same ``cfg.execution_plan()`` rows as
+    :func:`site_workloads`, but keeping the lif/lif_state twins (their
+    backward kernels differ) and the full launch layout instead of the
+    energy-model op counts.
+    """
+    from repro.analysis.audit import fused_site_geometries
+
+    geoms = fused_site_geometries(cfg, batch)
+    specs = _spec_map(cfg)
+    t, n, d, h = (cfg.time_steps, cfg.num_tokens, cfg.d_model, cfg.n_heads)
+    dh = d // h
+    g = t * batch * h
+    conv_geoms = sorted((s, gm) for s, gm in geoms.items()
+                        if s.startswith("tokenizer.conv"))
+
+    out: list[KernelShapeCase] = []
+    for row in cfg.execution_plan():
+        site, op, impl = row.site, row.op, row.effective
+        _, pack_dim, spike, trailing = specs.get(
+            site, (op, None, False, False))
+        if op in ("lif", "lif_state"):
+            # The SOMA/GRAD pair runs on fold_time_major output (T, M, D);
+            # the tokenizer site sees one geometry per conv stage.
+            if site == "tokenizer.lif":
+                for cs, (gt, gm, _, gk) in conv_geoms:
+                    out.append(KernelShapeCase(site=f"{site}[{cs}]", op=op,
+                                               impl=impl, packed=False,
+                                               t=gt, m=gm, c=0, k=gk))
+            else:
+                out.append(KernelShapeCase(site=site, op=op, impl=impl,
+                                           packed=False, t=t, m=batch * n,
+                                           c=0, k=d))
+            continue
+        if op == "bn":
+            # Dispatches on fold_rows output (T*M, D), per conv stage.
+            for cs, (gt, gm, _, gk) in conv_geoms:
+                out.append(KernelShapeCase(site=f"{site}[{cs}]", op=op,
+                                           impl=impl, packed=False,
+                                           t=1, m=gt * gm, c=0, k=gk))
+            continue
+        if op in ("conv", "linear_bn"):
+            gt, gm, gc, gk = geoms[site]
+            packed_impls = (("pallas_packed", "fused_epilogue")
+                            if op == "conv"
+                            else ("pallas+spike_mm", "fused_epilogue"))
+            packed = bool(spike and gc % 8 == 0 and impl in packed_impls)
+            if impl == "fused_epilogue" or (op == "conv"
+                                            and impl != "jnp"):
+                shape = (gt, gm, gc, gk)     # time-major (T, M, C) launch
+            else:
+                shape = (1, gt * gm, gc, gk)  # fold_rows pipeline launch
+            out.append(KernelShapeCase(site=site, op=op, impl=impl,
+                                       packed=packed, t=shape[0], m=shape[1],
+                                       c=shape[2], k=shape[3]))
+            continue
+        if op in ("attn_qk", "attn_av"):
+            packed = bool((dh if op == "attn_qk" else n) % 8 == 0 and
+                          impl == "pallas_packed")
+            if op == "attn_qk":
+                out.append(KernelShapeCase(site=site, op=op, impl=impl,
+                                           packed=packed, t=g, m=n, c=dh,
+                                           k=n))
+            else:                   # transpose trick: V^T on the packed side
+                out.append(KernelShapeCase(site=site, op=op, impl=impl,
+                                           packed=packed, t=g, m=dh, c=n,
+                                           k=n))
+            continue
+    return out
+
+
 def _lif_site_elems(site: str, cfg, batch: int, geoms) -> int:
     t, n, d = cfg.time_steps, cfg.num_tokens, cfg.d_model
     if site == "tokenizer.lif":

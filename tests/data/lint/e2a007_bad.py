@@ -1,0 +1,40 @@
+"""Golden BAD snippet for E2A007: BlockSpec index_map arity disagrees
+with the literal grid rank at a pallas_call site."""
+import jax
+from jax.experimental import pallas as pl
+
+
+def _copy_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def mismatched_inline(x):
+    # BAD: rank-2 grid, but the in_spec index_map takes one index.
+    return pl.pallas_call(
+        _copy_kernel,
+        grid=(4, 4),
+        in_specs=[pl.BlockSpec((128, 128), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((128, 128), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)
+
+
+def mismatched_named(x):
+    grid = (8,)
+    spec = pl.BlockSpec((128, 128), lambda i, j: (i, j))
+    # BAD: rank-1 grid resolved through the local names, 2-arg index_map.
+    return pl.pallas_call(
+        _copy_kernel, grid=grid, in_specs=[spec], out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)
+
+
+def mismatched_scalar_grid(x):
+    # BAD: an int literal grid is rank 1; the lambda wants three indices.
+    return pl.pallas_call(
+        _copy_kernel,
+        grid=8,
+        in_specs=[pl.BlockSpec((128, 128), lambda i, j, k: (i, 0))],
+        out_specs=pl.BlockSpec((128, 128), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)

@@ -1,0 +1,45 @@
+"""Golden GOOD snippet for E2A007: every index_map arity matches its
+grid rank; dynamic grids are out of static reach and stay silent."""
+import jax
+from jax.experimental import pallas as pl
+
+
+def _copy_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def matched_inline(x):
+    # GOOD: rank-2 grid, 2-arg index_maps everywhere.
+    return pl.pallas_call(
+        _copy_kernel,
+        grid=(4, 4),
+        in_specs=[pl.BlockSpec((128, 128), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((128, 128), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)
+
+
+def matched_named(x, blocks):
+    grid = (blocks, 4)
+    spec = pl.BlockSpec((128, 128), lambda i, j: (i, j))
+    # GOOD: the tuple literal may hold non-constant entries — only its
+    # rank matters, and it matches the lambdas.
+    return pl.pallas_call(
+        _copy_kernel, grid=grid, in_specs=[spec], out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)
+
+
+def _grid_specs(shape):
+    return (shape[0] // 128,), [pl.BlockSpec((128, 128), lambda i: (i, 0))]
+
+
+def dynamic_grid(x):
+    # GOOD (skipped): the grid comes out of a helper, not a literal —
+    # static analysis cannot know its rank.
+    grid, in_specs = _grid_specs(x.shape)
+    return pl.pallas_call(
+        _copy_kernel, grid=grid, in_specs=in_specs,
+        out_specs=pl.BlockSpec((128, 128), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)

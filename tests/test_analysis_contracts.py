@@ -1,0 +1,246 @@
+"""Tests for the kernel-contract verifier (repro.analysis.contracts):
+the current tree verifies clean while provably executing zero Pallas
+kernels, and each doctored kernel — an out-of-range index_map, a bwd
+cotangent shape mismatch, a dtype drift against the ref.py oracle, an
+over-budget scratch declaration — is caught with the right
+``audit.kernel.*`` check name. Mirrors test_analysis_audit.py."""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+import repro.kernels.contract as kc
+from repro.analysis.contracts import (audit_kernel_coverage,
+                                      audit_kernel_matrix,
+                                      audit_kernel_vjps,
+                                      audit_registry_retrace, run_contracts)
+from repro.analysis.report import exit_code, promote_warnings
+from repro.kernels import ops
+
+REPO = Path(__file__).parent.parent
+
+SMOKE = ["spikingformer-smoke"]
+
+
+def _errors(findings):
+    return [f for f in findings if f.level == "error"]
+
+
+def _run_cli(*argv: str) -> subprocess.CompletedProcess:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *argv],
+        cwd=REPO, env=env, capture_output=True, text=True)
+
+
+def _decl(name: str) -> kc.KernelContract:
+    return kc.kernel_contracts()[name]
+
+
+# -- clean tree --------------------------------------------------------------
+
+def test_clean_tree_verifies_without_errors_and_without_execution(
+        monkeypatch):
+    """The acceptance bar: the full smoke matrix passes, and a booby-trap
+    in place of the real ``pallas_call`` proves no kernel is ever *built*
+    outside the interceptor (the interceptor's fake never calls through)."""
+    from jax.experimental import pallas as pl
+
+    leaked = []
+
+    def raiser(*a, **kw):   # a real launch would land here
+        leaked.append(a)
+        raise AssertionError("pallas_call leaked past the interceptor")
+
+    monkeypatch.setattr(pl, "pallas_call", raiser)
+    findings = run_contracts(presets=SMOKE)
+    assert leaked == [], "contract verification executed a real pallas_call"
+    assert _errors(findings) == [], \
+        "\n".join(f.format() for f in _errors(findings))
+    assert exit_code(findings) == 0
+
+
+def test_registry_retrace_is_stable():
+    findings = audit_registry_retrace(presets=SMOKE)
+    assert _errors(findings) == [], \
+        "\n".join(f.format() for f in _errors(findings))
+
+
+# -- doctored-kernel injections ---------------------------------------------
+
+def test_out_of_range_index_map_is_caught(monkeypatch):
+    # The doctored spike_matmul maps block i+1 on the row axis: the last
+    # grid step indexes one block past the end of the operand.
+    from jax.experimental import pallas as pl
+
+    def doctored(spikes, w):
+        m, c = spikes.shape
+        k = w.shape[1]
+        return pl.pallas_call(
+            lambda s_ref, w_ref, o_ref: None,
+            grid=(m // 8,),
+            in_specs=[pl.BlockSpec((8, c), lambda i: (i + 1, 0)),
+                      pl.BlockSpec((c, k), lambda i: (0, 0))],
+            out_specs=pl.BlockSpec((8, k), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((m, k), w.dtype),
+        )(spikes, w)
+
+    decl = _decl("spike_matmul")
+    monkeypatch.setitem(kc._CONTRACTS, "spike_matmul",
+                        dataclasses.replace(decl, fn=doctored, ref=None))
+    findings = audit_kernel_matrix(presets=SMOKE)
+    errs = [f for f in _errors(findings) if f.check == "audit.kernel.block"]
+    assert errs, "out-of-range index_map not flagged"
+    assert any("out of range" in f.message for f in errs)
+    assert exit_code(findings) != 0
+
+
+def test_bwd_cotangent_shape_mismatch_is_caught(monkeypatch):
+    # bn_train_op's doctored bwd returns dgamma as a (1, K) stat row
+    # instead of the (K,) param shape — the dropped-squeeze bug class.
+    real_bwd = ops.bn_train_op.bwd
+
+    def doctored_bwd(eps, interpret, res, ct):
+        dx, dgamma, dbeta = real_bwd(eps, interpret, res, ct)
+        return dx, dgamma.reshape(1, -1), dbeta
+
+    monkeypatch.setattr(ops.bn_train_op, "bwd", doctored_bwd)
+    findings = audit_kernel_vjps()
+    errs = [f for f in _errors(findings) if f.check == "audit.kernel.vjp"]
+    assert errs, "cotangent shape mismatch not flagged"
+    assert any("bn_train_op" in f.where for f in errs)
+    assert exit_code(findings) != 0
+
+
+def test_bwd_dtype_drift_is_caught(monkeypatch):
+    # The silent-upcast bug class: bwd hands back fp32 cotangents for
+    # bf16 primals. The bf16 sweep must flag it; fp32 stays clean.
+    real_bwd = ops.spike_matmul_train_op.bwd
+
+    def doctored_bwd(block, interpret, res, ct):
+        dspikes, dw = real_bwd(block, interpret, res, ct)
+        return dspikes, dw.astype(jnp.float32)
+
+    monkeypatch.setattr(ops.spike_matmul_train_op, "bwd", doctored_bwd)
+    findings = audit_kernel_vjps()
+    errs = [f for f in _errors(findings) if f.check == "audit.kernel.vjp"]
+    assert errs, "fp32 cotangent upcast not flagged"
+    assert any("bfloat16" in f.where and "spike_matmul_train_op" in f.where
+               for f in errs)
+
+
+def test_dtype_drift_against_reference_is_caught(monkeypatch):
+    # The doctored bn_fwd quietly emits fp16 activations; the ref.py
+    # oracle keeps the input dtype, so parity must fail.
+    decl = _decl("bn_fwd")
+    real_fn = decl.fn
+
+    def drifted(*args, **kwargs):
+        out = real_fn(*args, **kwargs)
+        return jax.tree.map(lambda x: x.astype(jnp.float16), out)
+
+    monkeypatch.setitem(kc._CONTRACTS, "bn_fwd",
+                        dataclasses.replace(decl, fn=drifted))
+    findings = audit_kernel_matrix(presets=SMOKE)
+    errs = [f for f in _errors(findings)
+            if f.check == "audit.kernel.parity"]
+    assert errs, "fp16 output drift vs reference not flagged"
+    assert any("bn_fwd" in f.where for f in errs)
+    assert exit_code(findings) != 0
+
+
+def test_over_budget_scratch_is_caught(monkeypatch):
+    # The doctored spike_matmul declares a 64 MiB fp32 VMEM scratch —
+    # over any sane budget; with --strict semantics that exits non-zero.
+    from jax.experimental import pallas as pl
+    from jax.experimental.pallas import tpu as pltpu
+
+    decl = _decl("spike_matmul")
+    real_fn = decl.fn
+
+    def hog(spikes, w, **kwargs):
+        m, c = spikes.shape
+        k = w.shape[1]
+        out = pl.pallas_call(
+            lambda s_ref, w_ref, o_ref, acc_ref: None,
+            grid=(1,),
+            in_specs=[pl.BlockSpec((m, c), lambda i: (0, 0)),
+                      pl.BlockSpec((c, k), lambda i: (0, 0))],
+            out_specs=pl.BlockSpec((m, k), lambda i: (0, 0)),
+            out_shape=jax.ShapeDtypeStruct((m, k), w.dtype),
+            scratch_shapes=[pltpu.VMEM((4096, 4096), jnp.float32)],
+        )(spikes, w)
+        del out
+        return real_fn(spikes, w, **kwargs)
+
+    monkeypatch.setitem(kc._CONTRACTS, "spike_matmul",
+                        dataclasses.replace(decl, fn=hog))
+    findings = audit_kernel_matrix(presets=SMOKE)
+    warns = [f for f in findings
+             if f.level == "warning" and f.check == "audit.kernel.vmem"]
+    assert warns, "64 MiB scratch declaration not flagged"
+    assert any("spike_matmul" in f.where for f in warns)
+    # non-fatal by default (matches audit.plan.vmem), fatal under --strict
+    assert exit_code(findings) == 0
+    assert exit_code(promote_warnings(findings)) != 0
+
+
+def test_missing_declaration_fails_coverage(monkeypatch):
+    # spike_matmul_batched is the only declaration serving the packed
+    # attention arms; dropping it strands both (op, impl) pairs.
+    monkeypatch.delitem(kc._CONTRACTS, "spike_matmul_batched")
+    findings = audit_kernel_coverage()
+    errs = [f for f in _errors(findings)
+            if f.check == "audit.kernel.coverage"]
+    assert errs, "undeclared (op, impl) pair not flagged"
+    assert any("attn_qk/pallas_packed" in f.where for f in errs)
+
+
+def test_phantom_serves_pair_fails_coverage(monkeypatch):
+    decl = _decl("spike_matmul")
+    monkeypatch.setitem(
+        kc._CONTRACTS, "spike_matmul",
+        dataclasses.replace(decl,
+                            serves=decl.serves + (("linear_bn", "cuda"),)))
+    findings = audit_kernel_coverage()
+    errs = [f for f in _errors(findings)
+            if f.check == "audit.kernel.coverage"]
+    assert errs and any("cuda" in f.message for f in errs)
+
+
+def test_unstable_registry_factory_is_caught(monkeypatch):
+    # A factory whose lookups compare unequal: one jit trace per lookup.
+    import repro.configs.registry as registry
+
+    class Unstable:
+        pass
+
+    monkeypatch.setitem(registry._REGISTRY, "unstable-arch", None)
+    monkeypatch.setattr(registry, "get_config",
+                        lambda name: Unstable() if name == "unstable-arch"
+                        else registry._REGISTRY[name])
+    findings = audit_registry_retrace(presets=SMOKE)
+    errs = [f for f in _errors(findings)
+            if f.check == "audit.trace.registry"]
+    assert errs and any("unstable-arch" in f.where for f in errs)
+
+
+# -- CLI ---------------------------------------------------------------------
+
+def test_cli_contracts_exits_zero_and_writes_json(tmp_path):
+    out = tmp_path / "findings.json"
+    res = _run_cli("--contracts", "--json", str(out))
+    assert res.returncode == 0, res.stdout + res.stderr
+    payload = json.loads(out.read_text())
+    assert payload["counts"]["error"] == 0
+    assert {"level", "check", "where", "message"} <= \
+        set(payload["findings"][0])
+    assert any(f["check"].startswith("audit.kernel")
+               for f in payload["findings"])

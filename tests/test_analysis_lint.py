@@ -43,10 +43,35 @@ def test_golden_good_snippet_is_clean(rule):
 def test_allowlist_comment_suppresses_named_rule():
     findings = lint_source((DATA / "allowlist.py").read_text())
     # every acknowledged violation is silenced; the one whose ignore names
-    # a different rule still fires.
-    assert len(findings) == 1
-    assert findings[0].check == "E2A002"
-    assert "wrong_rule" in findings[0].message
+    # a different rule still fires — both as the un-suppressed E2A002 and
+    # as the stale-ignore warning for the comment that silenced nothing.
+    errors = [f for f in findings if f.level == "error"]
+    assert len(errors) == 1
+    assert errors[0].check == "E2A002"
+    assert "wrong_rule" in errors[0].message
+    stale = [f for f in findings if f.check == "lint.ignore"]
+    assert len(stale) == 1
+    assert "E2A001" in stale[0].message
+
+
+def test_unused_suppression_is_flagged_and_docstrings_do_not_count():
+    # the ignore comment silences nothing -> lint.ignore warning; the same
+    # pattern inside a *docstring* is not a comment token and stays silent.
+    src = ('"""mentions # e2a: ignore[E2A005] in prose only."""\n'
+           "x = 1   # e2a: ignore[E2A005]\n")
+    findings = lint_source(src)
+    assert [f.check for f in findings] == ["lint.ignore"]
+    assert findings[0].level == "warning"
+    assert "2" in findings[0].where
+
+
+def test_repo_tree_has_no_unused_suppressions():
+    """Every ``# e2a: ignore`` in the repo (tests included) must still
+    suppress a live finding — stale allowlist comments fail here."""
+    findings = lint_paths([REPO / "src", REPO / "benchmarks",
+                           REPO / "examples", REPO / "tests"])
+    stale = [f for f in findings if f.check == "lint.ignore"]
+    assert stale == [], "\n".join(f.format() for f in stale)
 
 
 def test_repo_tree_is_clean():
